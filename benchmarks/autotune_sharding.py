@@ -1,0 +1,115 @@
+"""Mango autotunes the framework's OWN distribution config (beyond-paper).
+
+The paper's batched-GP-bandit search applied to a systems surface: each
+trial spawns a dry-run subprocess (lower + compile + roofline analysis) for
+one (arch x shape) cell with a candidate configuration of
+
+    microbatches x remat policy x MoE capacity factor x CE chunk x
+    attention q-chunk x sequence parallelism x attention fallback,
+
+and the objective is the negated bottleneck (max of the three roofline
+terms).  Trials that fail to compile return nothing — the scheduler-style
+partial-result contract in its natural systems habitat.
+
+  PYTHONPATH=src python -m benchmarks.autotune_sharding \
+      --arch qwen2-moe-a2.7b --shape train_4k --iterations 4 --batch 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.core import Tuner
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "artifacts" / "autotune"
+
+
+def make_trial(arch: str, shape: str, mesh: str):
+    def trial(par) -> float:
+        tag = f"at{abs(hash(tuple(sorted(par.items())))) % 10 ** 8}"
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--tag", tag, "--out", str(OUT),
+               "--micro", str(int(par["micro"])),
+               "--remat", par["remat"],
+               "--capacity-factor", str(par["capacity_factor"]),
+               "--ce-chunk", str(int(par["ce_chunk"])),
+               "--attn-q-chunk", str(int(par["attn_q_chunk"]))]
+        if par["seq_parallel"] == "on":
+            cmd.append("--seq-parallel")
+        if par["zero"] == "zero1":
+            cmd.append("--zero1")
+        p = subprocess.run(cmd, capture_output=True, text=True, timeout=1500,
+                           env={"PYTHONPATH": str(ROOT / "src"),
+                                "PATH": "/usr/bin:/bin"},
+                           cwd=str(ROOT))
+        art = OUT / f"{arch}__{shape}__{mesh}__{tag}.json"
+        if p.returncode != 0 or not art.exists():
+            raise RuntimeError(f"compile failed: {p.stdout[-300:]}")
+        d = json.loads(art.read_text())
+        r = d["roofline"]
+        bottleneck = max(r["t_compute_s"], r["t_memory_s"],
+                         r["t_collective_s"])
+        print(f"#   trial {par} -> bottleneck {bottleneck:.2f}s "
+              f"(dominant {r['dominant']})", flush=True)
+        return -bottleneck
+
+    return trial
+
+
+SPACE = {
+    "micro": [1, 2, 4, 8, 16],
+    "remat": ["none", "dots", "full"],
+    "capacity_factor": [1.0, 1.25, 1.5],
+    "ce_chunk": [256, 512, 1024],
+    "attn_q_chunk": [256, 512, 1024],
+    "seq_parallel": ["off", "on"],
+    "zero": ["zero3", "zero1"],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--iterations", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+
+    trial = make_trial(args.arch, args.shape, args.mesh)
+
+    def objective(params_list):
+        evals, params = [], []
+        for par in params_list:
+            try:
+                evals.append(trial(par))
+                params.append(par)
+            except Exception as e:  # failed compile -> dropped result
+                print(f"#   trial failed: {e}", flush=True)
+        return evals, params
+
+    t0 = time.time()
+    res = Tuner(SPACE, objective, dict(
+        optimizer="bayesian", batch_size=args.batch,
+        num_iteration=args.iterations, initial_random=2, seed=0,
+        mc_samples=2000, fit_steps=15,
+        checkpoint_path=str(OUT / "tuner_state.json"))).maximize()
+    print(json.dumps({
+        "cell": f"{args.arch}/{args.shape}/{args.mesh}",
+        "best_bottleneck_s": -res.best_objective,
+        "best_config": res.best_params,
+        "trials_observed": len(res.objective_values),
+        "trials_failed": res.n_failed,
+        "wall_min": round((time.time() - t0) / 60, 1),
+    }, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Batch-size scaling (paper §2.4: batch_size is the per-job parallelism).
+
+Measures iterations-to-target on the mixed Branin as batch size grows —
+the parallel-efficiency view of the hallucination strategy: bigger batches
+cost more evals but fewer synchronous rounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.fig3_branin import SPACE, _objective_factory
+from repro.core import Tuner
+
+TARGET = 2.0  # minimize: reach f <= 2.0
+
+
+def run(repeats=3, n_iters=25):
+    rows = []
+    for batch in (1, 2, 5, 10):
+        iters_needed, evals_needed = [], []
+        for rep in range(repeats):
+            res = Tuner(SPACE, _objective_factory(), dict(
+                optimizer="bayesian", batch_size=batch,
+                num_iteration=n_iters, initial_random=2, seed=2000 + rep,
+                mc_samples=1200, fit_steps=12)).minimize()
+            vals = res.objective_values
+            best = np.inf
+            hit_eval = None
+            for i, v in enumerate(vals):
+                best = min(best, v)
+                if best <= TARGET:
+                    hit_eval = i + 1
+                    break
+            hit_iter = (np.ceil((hit_eval - 2) / batch)
+                        if hit_eval and hit_eval > 2 else 1) \
+                if hit_eval else n_iters
+            iters_needed.append(float(hit_iter))
+            evals_needed.append(float(hit_eval or len(vals)))
+        rows.append((batch, float(np.mean(iters_needed)),
+                     float(np.mean(evals_needed))))
+    return rows

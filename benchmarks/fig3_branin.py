@@ -1,0 +1,53 @@
+"""Fig. 3 analogue: modified mixed-variable Branin (Halstrup 2016 flavor).
+
+x1 is continuous on [-5, 10]; x2 is *discretized* to the 16 integer levels
+of [0, 15]; a categorical switch adds a constant shelf to one branch.  The
+global minimum stays at the classic Branin basins (f* ~= 0.4 at the discrete
+x2 resolution).  Minimization; serial and batch-5 parallel regimes.
+"""
+from __future__ import annotations
+
+import math
+
+from scipy.stats import uniform
+
+from benchmarks.optimizers import run_algorithms
+
+
+def branin(x1: float, x2: float) -> float:
+    a, b, c = 1.0, 5.1 / (4 * math.pi ** 2), 5 / math.pi
+    r, s, t = 6.0, 10.0, 1 / (8 * math.pi)
+    return (a * (x2 - b * x1 ** 2 + c * x1 - r) ** 2
+            + s * (1 - t) * math.cos(x1) + s)
+
+
+def modified_branin(p: dict) -> float:
+    shelf = {"low": 0.0, "high": 12.0}[p["mode"]]
+    return branin(p["x1"], float(p["x2"])) + shelf
+
+
+SPACE = {
+    "x1": uniform(-5, 15),      # [-5, 10]
+    "x2": range(0, 16),         # discretized
+    "mode": ["low", "high"],    # categorical shelf
+}
+
+
+def _objective_factory():
+    def objective(params_list):
+        return [modified_branin(p) for p in params_list], list(params_list)
+
+    return objective
+
+
+def run(n_iters=20, repeats=10, parallel_batch=5):
+    algos = {
+        "mango-serial": dict(optimizer="bayesian", batch_size=1),
+        "tpe-serial": dict(optimizer="tpe", batch_size=1),
+        "random-serial": dict(optimizer="random", batch_size=1),
+        "mango-parallel": dict(optimizer="bayesian",
+                               batch_size=parallel_batch),
+        "tpe-parallel": dict(optimizer="tpe", batch_size=parallel_batch),
+    }
+    return run_algorithms(SPACE, _objective_factory, algos, n_iters,
+                          repeats, maximize=False)

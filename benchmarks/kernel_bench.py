@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container, wall-times of the Pallas kernels are measured in
+interpret mode (a correctness path, NOT TPU performance) — reported alongside
+the jit'd jnp-oracle timing at the same shape, plus the analytic FLOPs so a
+GFLOP/s "derived" column exists.  TPU numbers come from running the same
+entry points with interpret=False on hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: B2 H8 KV2 S1024 hd64
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, H, KV, S, hd = 2, 8, 2, 1024, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    flops = 4 * B * H * S * S * hd * 0.5
+    us_ref = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v)
+    rows.append(("flash_attention_oracle_b2h8s1024", us_ref,
+                 f"{flops / us_ref / 1e3:.1f}GFLOPs_cpu"))
+    us_pal = _time(lambda q, k, v: flash_attention(q, k, v, block_q=128,
+                                                   block_k=128), q, k, v)
+    rows.append(("flash_attention_interpret", us_pal, "correctness_path"))
+
+    # ssm scan: B2 S2048 di256 N16
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+    from repro.kernels.ssm_scan.ssm_scan import ssm_scan
+    B, S, di, N = 2, 2048, 256, 16
+    A = jax.random.uniform(ks[0], (B, S, di, N), jnp.float32, 0.8, 0.999)
+    Bx = jax.random.normal(ks[1], (B, S, di, N), jnp.float32) * 0.1
+    C = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    us_ref = _time(jax.jit(ssm_scan_ref), A, Bx, C)
+    elems = B * S * di * N * 3
+    rows.append(("ssm_scan_oracle_b2s2048", us_ref,
+                 f"{elems / us_ref / 1e3:.1f}GElem_cpu"))
+    us_pal = _time(lambda a, b, c: ssm_scan(a, b, c, block_d=128, chunk=128),
+                   A, Bx, C)
+    rows.append(("ssm_scan_interpret", us_pal, "correctness_path"))
+
+    # mlstm chunk: B1 NH4 S1024 dh128
+    from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
+    from repro.kernels.mlstm_chunk.ref import mlstm_ref
+    B, NH, S, dh = 1, 4, 1024, 128
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, NH, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, NH, S, dh), jnp.float32) * dh ** -0.5
+    v = jax.random.normal(ks[2], (B, NH, S, dh), jnp.float32)
+    li = jax.random.normal(ks[3], (B, NH, S), jnp.float32)
+    lf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, NH, S)) - 1.0)
+    us_ref = _time(jax.jit(mlstm_ref), q, k, v, li, lf)
+    rows.append(("mlstm_recurrent_oracle_s1024", us_ref, "sequential_ref"))
+    us_pal = _time(lambda *a: mlstm_chunk(*a, chunk=128), q, k, v, li, lf)
+    rows.append(("mlstm_chunk_interpret", us_pal, "correctness_path"))
+
+    # gp acquisition: S=8192 candidates, n=256 train, d=8
+    from repro.kernels.gp_acquisition.ref import matern52, ucb_scores_ref
+    rng = np.random.default_rng(0)
+    n, d, Sc = 256, 8, 8192
+    X = jnp.asarray(rng.uniform(size=(n, d)), jnp.float32)
+    mask = jnp.ones((n,), jnp.float32)
+    Km = matern52(X * 2.0, X * 2.0, 1.0, 1.0) + 0.01 * jnp.eye(n)
+    Kinv = jnp.linalg.inv(Km)
+    alpha = Kinv @ jnp.asarray(rng.normal(size=n), jnp.float32)
+    Cands = jnp.asarray(rng.uniform(size=(Sc, d)), jnp.float32)
+    f = jax.jit(lambda c: ucb_scores_ref(c * 2.0, X * 2.0, mask, Kinv,
+                                         alpha, 1.0, 1.0, 0.01, 4.0))
+    us_ref = _time(f, Cands)
+    flops = 2 * Sc * n * (d + n + 1)
+    rows.append(("gp_acquisition_oracle_s8192n256", us_ref,
+                 f"{flops / us_ref / 1e3:.1f}GFLOPs_cpu"))
+    return rows

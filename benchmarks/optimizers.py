@@ -1,0 +1,56 @@
+"""Shared benchmark harness: run (algorithm x repeats) and collect traces."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import Tuner
+
+
+def best_so_far(values: List[float], per_iter: int, n_iters: int,
+                maximize: bool) -> np.ndarray:
+    """Collapse the flat eval list into a best-so-far-per-iteration trace."""
+    out = []
+    best = -np.inf if maximize else np.inf
+    vals = list(values)
+    # initial-random evals count as iteration 0
+    for it in range(n_iters):
+        lo = it * per_iter
+        hi = min((it + 1) * per_iter, len(vals))
+        for v in vals[lo:hi]:
+            best = max(best, v) if maximize else min(best, v)
+        out.append(best)
+    return np.array(out)
+
+
+def run_algorithms(space: dict, objective_of: Callable[[], Callable],
+                   algos: Dict[str, dict], n_iters: int, repeats: int,
+                   maximize: bool = True, mc_samples: int = 1200,
+                   fit_steps: int = 12) -> Dict[str, np.ndarray]:
+    """algos: name -> dict(optimizer=..., batch_size=...).
+
+    Returns name -> (repeats, n_iters) best-so-far traces.
+    """
+    traces = {}
+    for name, conf in algos.items():
+        rows = []
+        t0 = time.time()
+        for rep in range(repeats):
+            tuner = Tuner(space, objective_of(), dict(
+                num_iteration=n_iters, initial_random=2, seed=1000 + rep,
+                mc_samples=mc_samples, fit_steps=fit_steps, **conf))
+            res = tuner.maximize() if maximize else tuner.minimize()
+            # skip the 2 initial-random evals, then chunk by batch
+            vals = res.objective_values
+            init, rest = vals[:2], vals[2:]
+            best0 = max(init) if maximize else min(init)
+            trace = best_so_far(rest, conf.get("batch_size", 1), n_iters,
+                                maximize)
+            trace = (np.maximum if maximize else np.minimum)(trace, best0)
+            rows.append(trace)
+        traces[name] = np.stack(rows)
+        print(f"#   {name:28s} mean_final={traces[name][:, -1].mean():.4f} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+    return traces

@@ -1,0 +1,57 @@
+"""Roofline table generator: reads dry-run artifacts -> CSV / markdown."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(tag="baseline"):
+    rows = []
+    for f in sorted(glob.glob(str(ARTIFACTS / f"*__{tag}.json"))):
+        d = json.load(open(f))
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "tag": tag,
+            "compute_s": r["t_compute_s"], "memory_s": r["t_memory_s"],
+            "collective_s": r["t_collective_s"],
+            "dominant": r["dominant"].replace("t_", "").replace("_s", ""),
+            "fraction": r["roofline_fraction"],
+            "useful_ratio": d.get("useful_flops_ratio") or 0.0,
+            "model_flops": d.get("model_flops", 0),
+            "hlo_flops_global": d.get("hlo_flops_global", 0),
+            "n_micro": d.get("n_microbatches"),
+        })
+    return rows
+
+
+def csv_rows(tag="baseline"):
+    out = []
+    for r in load(tag):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        derived = (f"dom={r['dominant']};frac={r['fraction']:.3f};"
+                   f"useful={r['useful_ratio']:.2f}")
+        out.append((name, us, derived))
+    return out
+
+
+def markdown(tag="baseline") -> str:
+    rows = load(tag)
+    lines = ["| arch | shape | mesh | compute(s) | memory(s) | collective(s)"
+             " | dominant | roofline frac | useful FLOPs ratio |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['fraction']:.3f} | {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, LayerSpec, ShapeConfig, SHAPES
+from repro.configs.registry import ARCH_IDS, all_configs, cells, get_config, get_shape
+
+__all__ = [
+    "ArchConfig", "LayerSpec", "ShapeConfig", "SHAPES",
+    "ARCH_IDS", "all_configs", "cells", "get_config", "get_shape",
+]

@@ -1,0 +1,5 @@
+from repro.core.spaces import ParamSpace, loguniform
+from repro.core.tuner import Tuner, TunerResults
+
+__all__ = ["ParamSpace", "loguniform", "Tuner", "TunerResults"]
+from repro.core import tpe as _tpe  # registers optimizer="tpe"

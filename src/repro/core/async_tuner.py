@@ -1,0 +1,100 @@
+"""Asynchronous tuner (beyond-paper): continuous batching of trials.
+
+The synchronous tuner waits for a whole batch before refitting.  With
+heterogeneous trial times (the common case for NAS/big-model tuning), workers
+idle at every barrier.  ``AsyncTuner`` keeps exactly ``batch_size`` trials in
+flight: whenever one completes it is observed, the GP is refit, pending
+trials are *hallucinated* (GP-BUCB semantics extend naturally to the async
+setting — pending configs contribute variance contraction but no mean
+update), and one replacement trial is dispatched.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.acquisition import adaptive_beta, ucb
+from repro.core.spaces import ParamSpace
+from repro.core.strategies import HallucinationStrategy
+from repro.scheduler.distributed import TaskQueueScheduler
+
+
+class AsyncTuner:
+    def __init__(self, param_space: Dict[str, Any],
+                 trial_fn: Callable[[Dict[str, Any]], float],
+                 scheduler: TaskQueueScheduler,
+                 num_evals: int = 40, batch_size: int = 4,
+                 initial_random: int = 4, seed: int = 0,
+                 mc_samples: Optional[int] = None,
+                 poll_interval: float = 0.01):
+        self.space = ParamSpace(param_space)
+        self.trial_fn = trial_fn
+        self.sched = scheduler
+        self.num_evals = num_evals
+        self.batch_size = batch_size
+        self.initial_random = initial_random
+        self.mc_samples = mc_samples
+        self.poll = poll_interval
+        self._rng = np.random.default_rng(seed)
+
+    def maximize(self) -> Dict[str, Any]:
+        t0 = time.time()
+        strat = HallucinationStrategy(self.space.dim, self.space.domain_size)
+        X_obs: List[Dict] = []
+        y_obs: List[float] = []
+        pending = {}  # task -> params
+        dispatched = 0
+        failed = 0
+
+        def launch(params):
+            nonlocal dispatched
+            t = self.sched.submit(self.trial_fn, params)
+            pending[t] = params
+            dispatched += 1
+
+        for p in self.space.sample(
+                min(self.initial_random, self.num_evals), self._rng):
+            launch(p)
+
+        while y_obs.__len__() + failed < self.num_evals:
+            done = [t for t in pending if t.done.is_set()]
+            if not done:
+                time.sleep(self.poll)
+                continue
+            for t in done:
+                params = pending.pop(t)
+                if t.error is None and np.isfinite(t.result):
+                    X_obs.append(params)
+                    y_obs.append(float(t.result))
+                else:
+                    failed += 1
+            while (dispatched < self.num_evals
+                   and len(pending) < self.batch_size):
+                if len(y_obs) < 2:
+                    launch(self.space.sample(1, self._rng)[0])
+                    continue
+                n_mc = self.mc_samples or self.space.mc_samples(
+                    self.batch_size)
+                cands = self.space.sample(n_mc, self._rng)
+                C = self.space.encode(cands)
+                st = strat.gp.fit(self.space.encode(X_obs),
+                                  np.asarray(y_obs))
+                for pp in pending.values():  # hallucinate in-flight trials
+                    st = strat.gp.hallucinate(
+                        st, self.space.encode([pp])[0])
+                mu, sd = strat.gp.predict(C, st)
+                beta = adaptive_beta(len(y_obs), self.space.domain_size,
+                                     batch_index=len(pending))
+                launch(cands[int(np.argmax(ucb(mu, sd, beta)))])
+
+        best = int(np.argmax(y_obs)) if y_obs else -1
+        return {
+            "best_objective": y_obs[best] if y_obs else float("nan"),
+            "best_params": X_obs[best] if y_obs else {},
+            "objective_values": y_obs,
+            "params_tried": X_obs,
+            "n_failed": failed,
+            "wall_time_s": time.time() - t0,
+        }

@@ -1,0 +1,59 @@
+"""jit'd k-means (k-means++ seeding + Lloyd iterations) for the clustering
+batch strategy (Groves & Pyzer-Knapp 2018)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans(X: jax.Array, w: jax.Array, key, k: int, iters: int = 10
+            ) -> jax.Array:
+    """X (n, d) points, w (n,) weights -> cluster assignment (n,)."""
+    n = X.shape[0]
+
+    # k-means++ seeding (weighted by w)
+    def seed_body(carry, i):
+        centers, d2min, key = carry
+        key, sub = jax.random.split(key)
+        probs = d2min * w
+        probs = jnp.where(probs.sum() > 0, probs / probs.sum(),
+                          jnp.ones(n) / n)
+        idx = jax.random.choice(sub, n, p=probs)
+        c = X[idx]
+        centers = centers.at[i].set(c)
+        d2 = jnp.sum((X - c) ** 2, axis=-1)
+        return (centers, jnp.minimum(d2min, d2), key), None
+
+    key, sub = jax.random.split(key)
+    first = X[jax.random.choice(sub, n, p=w / jnp.maximum(w.sum(), 1e-9))]
+    centers0 = jnp.zeros((k, X.shape[1])).at[0].set(first)
+    d2min0 = jnp.sum((X - first) ** 2, axis=-1)
+    (centers, _, _), _ = jax.lax.scan(seed_body, (centers0, d2min0, key),
+                                      jnp.arange(1, k))
+
+    def lloyd(centers, _):
+        d2 = jnp.sum((X[:, None, :] - centers[None]) ** 2, axis=-1)  # (n, k)
+        assign = jnp.argmin(d2, axis=-1)
+        onehot = jax.nn.one_hot(assign, k) * w[:, None]
+        sums = onehot.T @ X
+        counts = onehot.sum(0)[:, None]
+        new_centers = jnp.where(counts > 0, sums / jnp.maximum(counts, 1e-9),
+                                centers)
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=iters)
+    d2 = jnp.sum((X[:, None, :] - centers[None]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=-1)
+
+
+def kmeans_assign(X: np.ndarray, weights: np.ndarray, k: int,
+                  seed: int = 0, iters: int = 10) -> np.ndarray:
+    if len(X) <= k:
+        return np.arange(len(X))
+    return np.asarray(_kmeans(jnp.asarray(X, dtype=jnp.float32),
+                              jnp.asarray(weights, dtype=jnp.float32),
+                              jax.random.PRNGKey(seed), k, iters))

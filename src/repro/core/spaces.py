@@ -1,0 +1,170 @@
+"""Hyperparameter search-space abstraction (paper §2.1).
+
+A space is a plain dict: ``{"C": uniform(0.1, 10), "kernel": ["rbf", "poly"],
+"depth": range(1, 10), "lr": loguniform(-4, 3)}`` — values may be:
+
+  * any scipy.stats frozen distribution (all 70+ work: the only contract is
+    ``.rvs(size, random_state)``; ``.cdf`` is used for unit-cube encoding
+    when available, as in Garrido-Merchan & Hernandez-Lobato's treatment of
+    continuous variables),
+  * Python ``range`` (uniform integer),
+  * list / tuple / np.ndarray (categorical, sampled uniformly),
+  * a constant (held fixed).
+
+``ParamSpace`` turns the dict into: native samplers (Monte-Carlo acquisition
+candidates are always *valid* configurations — the paper's approach to
+discrete/categorical parameters), a unit-cube encoder for the GP, and a
+domain-size estimate used by the adaptive-beta heuristic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+
+class loguniform:
+    """Mango's log-uniform: 10**uniform(lo_exp, lo_exp+size_exp).
+
+    Defined by extending the scipy sampling contract (.rvs/.cdf/.ppf), as the
+    paper prescribes for new distributions.
+    """
+
+    def __init__(self, lo_exp: float, size_exp: float):
+        self.lo = float(lo_exp)
+        self.size = float(size_exp)
+
+    def rvs(self, size=None, random_state=None):
+        if isinstance(random_state, np.random.Generator):
+            rng = random_state
+        else:
+            rng = np.random.default_rng(random_state)
+        e = rng.uniform(self.lo, self.lo + self.size, size)
+        return np.power(10.0, e)
+
+    def cdf(self, x):
+        x = np.asarray(x, dtype=float)
+        e = np.log10(np.maximum(x, 1e-300))
+        return np.clip((e - self.lo) / max(self.size, 1e-12), 0.0, 1.0)
+
+    def ppf(self, q):
+        return np.power(10.0, self.lo + np.asarray(q) * self.size)
+
+
+def _is_distribution(v: Any) -> bool:
+    return hasattr(v, "rvs")
+
+
+class _Param:
+    kind: str  # "dist" | "range" | "cat" | "const"
+
+    def __init__(self, name: str, v: Any):
+        self.name = name
+        if _is_distribution(v):
+            self.kind = "dist"
+            self.dist = v
+            self.dims = 1
+        elif isinstance(v, range):
+            self.kind = "range"
+            self.choices = np.array(list(v))
+            if len(self.choices) == 0:
+                raise ValueError(f"{name}: empty range")
+            self.dims = 1
+        elif isinstance(v, (list, tuple, np.ndarray)):
+            self.kind = "cat"
+            self.choices = list(v)
+            if len(self.choices) == 0:
+                raise ValueError(f"{name}: empty categorical list")
+            # numeric lists are ordinal (single dim); strings are one-hot
+            self.numeric = all(isinstance(c, (int, float, np.number))
+                               for c in self.choices)
+            self.dims = 1 if self.numeric else len(self.choices)
+        else:
+            self.kind = "const"
+            self.value = v
+            self.dims = 0
+
+    # ---- sampling (native distribution; always-valid configs) -------------
+    def sample(self, n: int, rng: np.random.Generator) -> List[Any]:
+        if self.kind == "dist":
+            out = np.asarray(self.dist.rvs(size=n, random_state=rng))
+            return list(out)
+        if self.kind == "range":
+            return list(rng.choice(self.choices, size=n))
+        if self.kind == "cat":
+            idx = rng.integers(0, len(self.choices), size=n)
+            return [self.choices[i] for i in idx]
+        return [self.value] * n
+
+    # ---- unit-cube encoding ------------------------------------------------
+    def encode(self, values: Sequence[Any]) -> np.ndarray:
+        n = len(values)
+        if self.kind == "dist":
+            v = np.asarray(values, dtype=float)
+            if hasattr(self.dist, "cdf"):
+                with np.errstate(all="ignore"):
+                    enc = np.nan_to_num(
+                        np.asarray(self.dist.cdf(v), dtype=float), nan=0.5)
+            else:  # sampling-only distribution: min-max over batch
+                lo, hi = v.min(), v.max()
+                enc = (v - lo) / (hi - lo + 1e-12)
+            return enc.reshape(n, 1)
+        if self.kind == "range":
+            lo, hi = self.choices[0], self.choices[-1]
+            v = np.asarray(values, dtype=float)
+            return ((v - lo) / max(hi - lo, 1)).reshape(n, 1)
+        if self.kind == "cat":
+            if self.numeric:
+                arr = np.asarray(self.choices, dtype=float)
+                lo, hi = arr.min(), arr.max()
+                v = np.asarray(values, dtype=float)
+                return ((v - lo) / max(hi - lo, 1e-12)).reshape(n, 1)
+            onehot = np.zeros((n, len(self.choices)))
+            index = {c: i for i, c in enumerate(self.choices)}
+            for r, val in enumerate(values):
+                onehot[r, index[val]] = 1.0
+            return onehot
+        return np.zeros((n, 0))
+
+    @property
+    def cardinality(self) -> float:
+        if self.kind == "dist":
+            return 100.0  # continuous: effective resolution heuristic
+        if self.kind in ("range", "cat"):
+            return float(len(self.choices))
+        return 1.0
+
+
+class ParamSpace:
+    def __init__(self, space: Dict[str, Any]):
+        if not isinstance(space, dict) or not space:
+            raise ValueError("param space must be a non-empty dict")
+        self.params = [_Param(k, v) for k, v in space.items()]
+        self.names = [p.name for p in self.params]
+        self.dim = sum(p.dims for p in self.params)
+
+    def sample(self, n: int, rng: np.random.Generator) -> List[Dict]:
+        cols = {p.name: p.sample(n, rng) for p in self.params}
+        return [{k: cols[k][i] for k in cols} for i in range(n)]
+
+    def encode(self, configs: List[Dict]) -> np.ndarray:
+        if not configs:
+            return np.zeros((0, self.dim))
+        blocks = [p.encode([c[p.name] for c in configs]) for p in self.params
+                  if p.dims]
+        return np.concatenate(blocks, axis=1) if blocks else np.zeros(
+            (len(configs), 0))
+
+    @property
+    def domain_size(self) -> float:
+        s = 1.0
+        for p in self.params:
+            s *= p.cardinality
+        return min(s, 1e12)
+
+    def mc_samples(self, batch_size: int = 1) -> int:
+        """Paper §2.3: sample count scales with #params / space complexity."""
+        base = 1000 * max(self.dim, 1) + 200 * int(math.log10(
+            self.domain_size + 1))
+        return int(np.clip(base * max(1, batch_size // 2), 2000, 32768))

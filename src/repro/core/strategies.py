@@ -1,0 +1,124 @@
+"""Parallel batch-selection strategies (paper §2.3).
+
+  * ``hallucination``: Batched GP Bandits / GP-BUCB (Desautels et al. 2014) —
+    sequentially pick argmax UCB, then *hallucinate* the observation at the
+    posterior mean so the variance contracts and the next pick explores a
+    different region (information gain across the batch is maximized).
+  * ``clustering``: (Groves & Pyzer-Knapp 2018) — compute the acquisition
+    surface on the MC candidates, keep the top quantile, k-means it into
+    ``batch_size`` spatially distinct clusters, return each cluster's argmax.
+  * ``random``: batch of valid random samples (the paper's third optimizer).
+
+All strategies consume an *encoded* candidate matrix sampled from the native
+parameter distributions, so every proposed configuration is valid (discrete /
+categorical parameters included).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.acquisition import adaptive_beta, ucb
+from repro.core.gp import GaussianProcess
+from repro.core.kmeans import kmeans_assign
+
+
+class BaseStrategy:
+    needs_gp = True
+
+    def __init__(self, dim: int, domain_size: float, fit_steps: int = 40,
+                 use_pallas: bool = False):
+        self.gp = GaussianProcess(dim, fit_steps=fit_steps)
+        self.domain_size = domain_size
+        self.use_pallas = use_pallas
+
+    def _predict(self, st, C: np.ndarray):
+        if self.use_pallas:
+            from repro.kernels.gp_acquisition import ops as gp_ops
+            return gp_ops.gp_mean_std(st, C)
+        return self.gp.predict(C, st)
+
+    def propose(self, X: np.ndarray, y: np.ndarray, candidates: np.ndarray,
+                batch_size: int, seed: int = 0) -> List[int]:
+        raise NotImplementedError
+
+
+class HallucinationStrategy(BaseStrategy):
+    def propose(self, X, y, candidates, batch_size, seed=0):
+        st = self.gp.fit(X, y)
+        n_evals = len(y)
+        picked: List[int] = []
+        avail = np.ones(len(candidates), dtype=bool)
+        for b in range(batch_size):
+            mu, sd = self._predict(st, candidates)
+            beta = adaptive_beta(n_evals, self.domain_size, batch_index=b)
+            acq = ucb(mu, sd, beta)
+            acq[~avail] = -np.inf
+            idx = int(np.argmax(acq))
+            picked.append(idx)
+            avail[idx] = False
+            if b + 1 < batch_size:
+                st = self.gp.hallucinate(st, candidates[idx])
+        return picked
+
+
+class ClusteringStrategy(BaseStrategy):
+    def __init__(self, *args, top_frac: float = 0.2, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.top_frac = top_frac
+
+    def propose(self, X, y, candidates, batch_size, seed=0):
+        st = self.gp.fit(X, y)
+        mu, sd = self._predict(st, candidates)
+        beta = adaptive_beta(len(y), self.domain_size)
+        acq = ucb(mu, sd, beta)
+        if batch_size == 1:
+            return [int(np.argmax(acq))]
+        n_top = max(batch_size * 4, int(len(candidates) * self.top_frac))
+        n_top = min(n_top, len(candidates))
+        top = np.argpartition(-acq, n_top - 1)[:n_top]
+        w = acq[top] - acq[top].min() + 1e-6
+        assign = kmeans_assign(candidates[top], w, batch_size, seed=seed)
+        picked = []
+        for c in range(batch_size):
+            members = top[assign == c]
+            if len(members) == 0:
+                rest = np.setdiff1d(top, np.array(picked, dtype=top.dtype))
+                members = rest if len(rest) else top
+            best = members[np.argmax(acq[members])]
+            picked.append(int(best))
+        # dedupe while preserving order; backfill with next-best acq
+        seen, uniq = set(), []
+        for p in picked:
+            if p not in seen:
+                uniq.append(p)
+                seen.add(p)
+        if len(uniq) < batch_size:
+            for p in np.argsort(-acq):
+                if int(p) not in seen:
+                    uniq.append(int(p))
+                    seen.add(int(p))
+                if len(uniq) == batch_size:
+                    break
+        return uniq
+
+
+class RandomStrategy(BaseStrategy):
+    needs_gp = False
+
+    def __init__(self, dim: int = 0, domain_size: float = 1.0, **kwargs):
+        pass
+
+    def propose(self, X, y, candidates, batch_size, seed=0):
+        rng = np.random.default_rng(seed)
+        return list(rng.choice(len(candidates), size=batch_size,
+                               replace=False))
+
+
+STRATEGIES = {
+    "bayesian": HallucinationStrategy,     # mango's default name
+    "hallucination": HallucinationStrategy,
+    "clustering": ClusteringStrategy,
+    "random": RandomStrategy,
+}

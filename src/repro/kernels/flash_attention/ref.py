@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q (B, H, Sq, hd); k/v (B, KV, Sk, hd); GQA groups = H // KV."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        iq = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 0)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 1)
+        scores = jnp.where((ik <= iq + (Sk - Sq))[None, None], scores,
+                           -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""jit'd wrapper: pads shapes to kernel-friendly sizes and dispatches.
+
+``gp_mean_std`` adapts a ``repro.core.gp.GPState`` to the fused kernel so the
+batch strategies can use it via ``Tuner(config={"use_pallas": True})``.
+On CPU the kernel runs in interpret mode (correctness path); on TPU set
+``interpret=False`` for the compiled kernel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gp_acquisition.gp_acquisition import ucb_scores_pallas
+from repro.kernels.gp_acquisition.ref import ucb_scores_ref
+
+
+def _pad_rows(a: np.ndarray, m: int) -> np.ndarray:
+    return np.pad(a, [(0, m - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+
+def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
+               block_s: int = 256, interpret: bool = True,
+               use_pallas: bool = True):
+    """Score candidates; pads S to a block multiple and d to a lane multiple."""
+    cands = np.asarray(cands, np.float32)
+    S, d = cands.shape
+    if not use_pallas:
+        return np.asarray(ucb_scores_ref(
+            jnp.asarray(cands), jnp.asarray(X), jnp.asarray(mask),
+            jnp.asarray(Kinv), jnp.asarray(alpha), jnp.asarray(ls),
+            jnp.asarray(var), jnp.asarray(noise), jnp.asarray(beta)))
+    dp = max(8, int(math.ceil(d / 8)) * 8)
+    Sp = int(math.ceil(S / block_s)) * block_s
+    ls = np.broadcast_to(np.asarray(ls, np.float32), (d,))
+    c = np.zeros((Sp, dp), np.float32)
+    c[:S, :d] = cands / ls
+    Xp = np.zeros((X.shape[0], dp), np.float32)
+    Xp[:, :d] = np.asarray(X, np.float32) / ls
+    out = ucb_scores_pallas(
+        jnp.asarray(c), jnp.asarray(Xp), jnp.asarray(mask, jnp.float32),
+        jnp.asarray(Kinv, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
+        jnp.asarray(beta, jnp.float32), block_s=block_s,
+        interpret=interpret)
+    return np.asarray(out)[:S]
+
+
+def gp_mean_std(st, cands):
+    """GPState-facing adapter returning (mu, sd) in the original y scale."""
+    L = np.asarray(st.L)
+    n = L.shape[0]
+    eye = np.eye(n, dtype=np.float32)
+    import scipy.linalg as sla
+    Linv = sla.solve_triangular(L, eye, lower=True)
+    Kinv = Linv.T @ Linv
+    alpha = Kinv @ np.asarray(st.y, np.float32)
+    var = float(st.var)
+    noise = float(st.noise)
+    # beta=0 -> returns mu; run twice (mu, then ucb with beta=1) to get sd
+    mu = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
+                    var, noise, 0.0)
+    u1 = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
+                    var, noise, 1.0)
+    sd = np.maximum(u1 - mu, 0.0)
+    return mu * st.y_std + st.y_mean, sd * st.y_std

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused GP-UCB acquisition scorer.
+
+Given the padded training set (X, mask), its precomputed K^-1 (from the
+Cholesky) and alpha = K^-1 y, score S candidate points:
+
+    k_i   = matern52(X, c_i)            (n,)
+    mu_i  = k_i . alpha
+    var_i = var + noise - k_i . (Kinv k_i)
+    ucb_i = mu_i + sqrt(beta) * sqrt(var_i)
+
+This is Mango's Monte-Carlo acquisition-maximization hot loop (paper §2.3):
+S is 10^3..10^5 per pick, times batch_size picks, times iterations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matern52(x1, x2, ls, var):
+    z1 = x1 / ls
+    z2 = x2 / ls
+    d2 = (jnp.sum(z1 * z1, -1)[:, None] + jnp.sum(z2 * z2, -1)[None, :]
+          - 2.0 * z1 @ z2.T)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    s = jnp.sqrt(5.0) * r
+    return var * (1.0 + s + (5.0 / 3.0) * d2) * jnp.exp(-s)
+
+
+def ucb_scores_ref(cands, X, mask, Kinv, alpha, ls, var, noise, beta):
+    """cands (S, d); X (n, d); mask (n,); Kinv (n, n); alpha (n,) -> (S,)."""
+    K = matern52(cands, X, ls, var) * mask[None, :]       # (S, n)
+    mu = K @ alpha
+    t = K @ Kinv                                          # (S, n)
+    q = jnp.sum(t * K, axis=-1)
+    sig2 = jnp.maximum(var + noise - q, 1e-10)
+    return mu + jnp.sqrt(beta) * jnp.sqrt(sig2)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle: fully-recurrent stabilized mLSTM (xLSTM matrix memory).
+
+The slow-but-obviously-correct sequential form the chunkwise kernel must
+match:  per step t (per head):
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) v_t k_t^T
+    n_t likewise;  h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """q/k/v (B, NH, S, dh) fp32; logi/logf (B, NH, S) -> h (B, NH, S, dh)."""
+    B, NH, S, dh = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)                     # (B, NH)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((B, NH, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, NH, dh), jnp.float32)
+    m0 = jnp.full((B, NH), -1e30, jnp.float32)
+    xs = (jnp.moveaxis(q, 2, 0), jnp.moveaxis(k, 2, 0),
+          jnp.moveaxis(v, 2, 0), jnp.moveaxis(logi, 2, 0),
+          jnp.moveaxis(logf, 2, 0))
+    (_, _, _), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 2)

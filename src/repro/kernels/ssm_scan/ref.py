@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the chunked selective-scan (Mamba) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(Abar, Bx, Cc):
+    """Abar/Bx (B, S, di, N) fp32; Cc (B, S, N) -> y (B, S, di).
+
+    h_t = Abar_t * h_{t-1} + Bx_t ;  y_t = sum_N h_t * C_t
+    """
+    def step(h, inp):
+        a, b, c = inp
+        h = a * h + b
+        return h, jnp.einsum("bin,bn->bi", h, c)
+
+    B, S, di, N = Abar.shape
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (Abar.swapaxes(0, 1), Bx.swapaxes(0, 1),
+                          Cc.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,145 @@
+"""Parse compiled HLO for collective traffic + roofline terms.
+
+``compiled.as_text()`` is the post-SPMD, per-device program: tensor shapes in
+it are LOCAL shards.  For each collective we derive per-chip bytes-on-wire
+with standard ring factors:
+
+  all-gather        out * (g-1)/g        (out = gathered, local)
+  reduce-scatter    out * (g-1)          (out = scattered piece)
+  all-reduce        out * 2(g-1)/g
+  all-to-all        out * (g-1)/g
+  collective-permute out * 1
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>[^=]+?)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)  # replica_groups=[8,64] -> 8 groups of 64
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, wire_bytes (per chip), raw_bytes}."""
+    stats = {k: {"count": 0, "wire_bytes": 0.0, "raw_bytes": 0.0}
+             for k in _COLL_KINDS}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        # async pairs: count the -start, skip the -done
+        if "-done(" in line:
+            continue
+        kind = m.group("kind")
+        out_bytes = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if kind == "all-gather":
+            wire = out_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif kind == "all-reduce":
+            wire = out_bytes * 2 * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = out_bytes
+        s = stats[kind]
+        s["count"] += 1
+        s["wire_bytes"] += wire
+        s["raw_bytes"] += out_bytes
+    return stats
+
+
+def model_flops(cfg, shape) -> float:
+    """Theoretically-useful FLOPs for this (arch, shape) cell.
+
+    6*N_active*D (train) / 2*N_active*D (prefill) / 2*N_active*B (decode)
+    plus exact-causal attention score/value FLOPs (which 6ND ignores and
+    which dominate small-d archs at long S).
+    """
+    pc = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for s in cfg.period if s.mixer == "attn") * cfg.n_periods
+    Hhd = cfg.n_heads * cfg.hd
+    if shape.kind == "train":
+        base = 6 * pc["active"] * B * S
+        attn = 3 * n_attn * 2 * B * S * S * Hhd  # causal: 0.5 * 4BS^2
+        if cfg.encoder_layers:
+            Se = cfg.encoder_seq
+            attn += 3 * cfg.encoder_layers * 4 * B * Se * Se * Hhd  # bidir
+            attn += 3 * n_attn * 4 * B * S * Se * Hhd               # cross
+        return base + attn
+    if shape.kind == "prefill":
+        base = 2 * pc["active"] * B * S
+        attn = n_attn * 2 * B * S * S * Hhd
+        if cfg.encoder_layers:
+            Se = cfg.encoder_seq
+            attn += cfg.encoder_layers * 4 * B * Se * Se * Hhd
+            attn += n_attn * 4 * B * S * Se * Hhd
+        return base + attn
+    # decode: one token against an S-long cache
+    base = 2 * pc["active"] * B
+    attn = n_attn * 4 * B * S * Hhd
+    if cfg.encoder_layers:
+        attn += n_attn * 4 * B * cfg.encoder_seq * Hhd
+    return base + attn
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   wire_bytes_per_chip: float) -> Dict[str, float]:
+    t_compute = flops_per_chip / PEAK_FLOPS
+    t_memory = hbm_bytes_per_chip / HBM_BW
+    t_coll = wire_bytes_per_chip / LINK_BW
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = t_compute / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,364 @@
+"""Static cost analysis of post-SPMD HLO text with loop multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+under-reports FLOPs/bytes/collectives for scan-over-layers models by a factor
+of n_layers (x microbatches).  This analyzer:
+
+  * splits the HLO module into computations,
+  * counts dot FLOPs (2 * prod(result) * prod(lhs contracting dims)),
+  * approximates HBM traffic: operand+result bytes of top-level ops, where
+      - fusion internals are VMEM-resident (not counted),
+      - a fusion operand that is only *sliced* inside the fusion contributes
+        the slice bytes, not the full buffer (critical for scan-carried
+        stacked parameter/residual buffers),
+      - dynamic-update-slice contributes the update bytes (in-place aliasing),
+  * counts collective wire bytes with ring factors,
+  * resolves the call graph (fusion/call/while/conditional) and multiplies
+    while bodies by their trip count (XLA's ``known_trip_count`` annotation,
+    falling back to the loop condition's ``compare(_, constant(N)) LT``).
+
+All numbers are per-device (the module is the post-SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<result>(?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(?P<op>[\w\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_PARAM_RE = re.compile(r"parameter\((\d+)\)")
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather", "get-tuple-element")
+# metadata / zero-traffic ops: tuples and GTEs are SSA bookkeeping, not moves
+_ELEMENTWISE_SKIP = ("bitcast", "reshape", "tuple", "get-tuple-element",
+                     "parameter", "constant", "after-all", "iota",
+                     "optimization-barrier", "copy-done", "partition-id",
+                     "replica-id")
+
+
+def _tok_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(text: str) -> float:
+    return sum(_tok_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_TOK.findall(text))
+
+
+def _shape_elems(text: str) -> int:
+    return sum(_tok_elems(dims) for _, dims in _SHAPE_TOK.findall(text))
+
+
+@dataclasses.dataclass
+class OpRec:
+    name: str
+    op: str
+    result: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "wire_bytes": 0.0}
+                                 for k in _COLL_KINDS})
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _HEADER_RE.match(line)
+        if m and "=" not in line.split("(", 1)[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(line)
+    return comps
+
+
+def _operand_names(line: str) -> List[str]:
+    m = re.search(r"\b[\w\-]+\((?P<args>[^)]*)\)", line)
+    if not m:
+        return []
+    names = []
+    for arg in m.group("args").split(","):
+        mm = re.search(r"%?([\w.\-]+)\s*$", arg.strip())
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+def _parse_ops(lines: List[str]) -> List[OpRec]:
+    out = []
+    for line in lines:
+        m = _OP_RE.match(line)
+        if m:
+            out.append(OpRec(m.group("name"), m.group("op"),
+                             m.group("result"), _operand_names(line), line))
+    return out
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def _wire(kind: str, out_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-reduce":
+        return out_bytes * 2 * (g - 1) / g
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return out_bytes  # collective-permute
+
+
+def analyze_module(hlo: str, n_devices: int) -> Dict:
+    comps_lines = _split_computations(hlo)
+    comps: Dict[str, List[OpRec]] = {n: _parse_ops(ls)
+                                     for n, ls in comps_lines.items()}
+
+    shapes: Dict[str, str] = {}
+    consts: Dict[str, int] = {}
+    for ops in comps.values():
+        for o in ops:
+            shapes[o.name] = o.result
+            cm = re.search(r"constant\((\d+)\)", o.line) \
+                if o.op == "constant" else None
+            if cm and "[]" in o.result:
+                consts[o.name] = int(cm.group(1))
+
+    # Per-computation, per-parameter "effective bytes" when used only through
+    # slicing ops (a scan reading one layer's slice of a stacked buffer), and
+    # in-place handling for fusions whose root is a dynamic-update-slice of a
+    # parameter (a scan *writing* one step's slice into a stacked buffer —
+    # only the updated slice moves, the buffer aliases in place).
+    param_eff: Dict[str, Dict[int, float]] = {}
+    fusion_result_eff: Dict[str, float] = {}
+    for name, ops in comps.items():
+        params: Dict[str, int] = {}
+        for o in ops:
+            if o.op == "parameter":
+                pm = _PARAM_RE.search(o.line)
+                if pm:
+                    params[o.name] = int(pm.group(1))
+        eff: Dict[int, float] = {}
+        dus_targets: Dict[str, float] = {}  # param name -> update bytes
+        for o in ops:
+            if o.op == "dynamic-update-slice" and len(o.operands) > 1:
+                upd_bytes = _shape_bytes(shapes.get(o.operands[1], ""))
+                tgt = o.operands[0]
+                if tgt in params and (_shape_bytes(shapes.get(tgt, ""))
+                                      == _shape_bytes(o.result)):
+                    dus_targets[tgt] = upd_bytes
+                    fusion_result_eff[name] = min(
+                        fusion_result_eff.get(name, float("inf")), upd_bytes)
+        for pname, idx in params.items():
+            if pname in dus_targets:
+                eff[idx] = dus_targets[pname]  # RMW of the slice only
+                continue
+            uses = [o for o in ops if pname in o.operands]
+            if uses and all(u.op in _SLICE_OPS for u in uses):
+                eff[idx] = sum(_shape_bytes(u.result) for u in uses)
+            else:
+                eff[idx] = _shape_bytes(shapes.get(pname, ""))
+        param_eff[name] = eff
+
+    costs: Dict[str, CompCost] = {}
+    fusion_comps = set()
+    for name, ops in comps.items():
+        c = CompCost()
+        for o in ops:
+            op, result, line = o.op, o.result, o.line
+            if op == "dot":
+                res_elems = _shape_elems(result)
+                contract = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm and o.operands:
+                    toks = _SHAPE_TOK.findall(shapes.get(o.operands[0], ""))
+                    if toks:
+                        dims = [int(x) for x in toks[0][1].split(",") if x]
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                contract *= dims[int(idx)]
+                c.flops += 2.0 * res_elems * contract
+                c.bytes += _shape_bytes(result) + sum(
+                    _shape_bytes(shapes.get(x, "")) for x in o.operands)
+            elif any(op == k or op == k + "-start" for k in _COLL_KINDS):
+                kind = op.replace("-start", "")
+                ob = _shape_bytes(result)
+                g = _group_size(line, n_devices)
+                c.coll[kind]["count"] += 1
+                c.coll[kind]["wire_bytes"] += _wire(kind, ob, g)
+                c.bytes += ob
+            elif op == "fusion":
+                cm = _CALLS_RE.search(line)
+                callee = cm.group(1) if cm else None
+                if callee:
+                    fusion_comps.add(callee)
+                    c.calls.append((callee, 1.0))
+                if callee in fusion_result_eff:  # in-place DUS fusion
+                    c.bytes += fusion_result_eff[callee]
+                else:
+                    c.bytes += _shape_bytes(result)
+                eff = param_eff.get(callee, {})
+                for i, x in enumerate(o.operands):
+                    full = _shape_bytes(shapes.get(x, ""))
+                    c.bytes += min(full, eff.get(i, full)) if eff else full
+            elif op == "dynamic-update-slice":
+                # in-place: only the update (operand 1) moves
+                upd = (shapes.get(o.operands[1], "")
+                       if len(o.operands) > 1 else result)
+                c.bytes += 2 * _shape_bytes(upd)
+            elif op == "while":
+                bm = _BODY_RE.search(line)
+                cm = _COND_RE.search(line)
+                if bm:
+                    trip = 1.0
+                    tm = _TRIP_RE.search(line)
+                    if tm:
+                        trip = float(tm.group(1))
+                    elif cm and cm.group(1) in comps_lines:
+                        trip = _cond_trip(comps[cm.group(1)], consts)
+                    c.calls.append((bm.group(1), trip))
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        c.calls.append((b.strip().lstrip("%"), 1.0))
+            elif op in ("call", "custom-call", "map", "reduce", "sort",
+                        "scatter", "reduce-window", "select-and-scatter"):
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    c.calls.append((cm.group(1), 1.0))
+                c.bytes += _shape_bytes(result) + sum(
+                    _shape_bytes(shapes.get(x, "")) for x in o.operands)
+            elif op in _ELEMENTWISE_SKIP:
+                pass
+            else:
+                # top-level unfused op: result + operands touch HBM
+                c.bytes += _shape_bytes(result) + sum(
+                    _shape_bytes(shapes.get(x, "")) for x in o.operands)
+        costs[name] = c
+
+    # fusion computations: internals are VMEM-resident; zero their own bytes
+    # and keep only dot FLOPs / collectives / nested calls.
+    for fname in fusion_comps:
+        if fname in costs:
+            costs[fname].bytes = 0.0
+
+    memo: Dict[str, Dict] = {}
+
+    def total(name: str, depth=0) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in costs or depth > 128:
+            return {"flops": 0.0, "bytes": 0.0,
+                    "coll": {k: {"count": 0.0, "wire_bytes": 0.0}
+                             for k in _COLL_KINDS}}
+        c = costs[name]
+        agg = {"flops": c.flops, "bytes": c.bytes,
+               "coll": {k: dict(v) for k, v in c.coll.items()}}
+        for callee, mult in c.calls:
+            sub = total(callee, depth + 1)
+            agg["flops"] += mult * sub["flops"]
+            agg["bytes"] += mult * sub["bytes"]
+            for k in _COLL_KINDS:
+                agg["coll"][k]["count"] += mult * sub["coll"][k]["count"]
+                agg["coll"][k]["wire_bytes"] += (
+                    mult * sub["coll"][k]["wire_bytes"])
+        memo[name] = agg
+        return agg
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    entry = m.group(1) if m else None
+    if entry not in comps:
+        called = {cl for cc in costs.values() for cl, _ in cc.calls}
+        roots = [n for n in comps if n not in called and n not in fusion_comps]
+        entry = roots[0] if roots else next(iter(comps))
+    out = total(entry)
+    out["entry"] = entry
+    out["n_computations"] = len(comps)
+
+    # effective loop multiplier per computation (for the breakdown)
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        for callee, m_ in costs.get(name, CompCost()).calls:
+            mult[callee] = mult.get(callee, 0.0) + mult[name] * m_
+            if callee not in order:
+                order.append(callee)
+    breakdown = []
+    for name, c in costs.items():
+        w = mult.get(name, 0.0)
+        if w == 0:
+            continue
+        fl = c.flops * w
+        by = c.bytes * w
+        wire = sum(v["wire_bytes"] for v in c.coll.values()) * w
+        if fl > 0 or by > 0 or wire > 0:
+            breakdown.append({"comp": name, "mult": w, "flops": fl,
+                              "bytes": by, "wire": wire})
+    out["breakdown"] = sorted(breakdown, key=lambda r: -max(
+        r["flops"] / 197e12, r["bytes"] / 819e9, r["wire"] / 50e9))[:12]
+    return out
+
+
+def _cond_trip(cond_ops: List[OpRec], consts: Dict[str, int]) -> float:
+    for o in cond_ops:
+        if o.op == "compare" and "direction=LT" in o.line:
+            for x in reversed(o.operands):
+                if x in consts:
+                    return float(consts[x])
+    vals = [consts[o.name] for o in cond_ops if o.name in consts]
+    return float(max(vals)) if vals else 1.0

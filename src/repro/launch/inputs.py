@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.common import Runtime
+from repro.models.transformer import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      rt: Runtime) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        batch["patches"] = SDS((B, cfg.vision_tokens, cfg.d_model),
+                               rt.compute_dtype)
+    if cfg.encoder_layers:
+        batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model),
+                              rt.compute_dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                        rt: Runtime) -> Dict[str, SDS]:
+    batch = train_batch_specs(cfg, shape, rt)
+    del batch["labels"]
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime
+                       ) -> Tuple[SDS, Dict, SDS]:
+    """(tokens, cache, cache_len) stand-ins for one decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = SDS((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, rt, B, S))
+    cache_len = SDS((), jnp.int32)
+    return tokens, cache, cache_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime):
+    """Public entry: the abstract inputs for the step this shape lowers."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, rt)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape, rt)}
+    tokens, cache, cache_len = decode_input_specs(cfg, shape, rt)
+    return {"tokens": tokens, "cache": cache, "cache_len": cache_len}

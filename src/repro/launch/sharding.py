@@ -1,0 +1,185 @@
+"""Best-effort parameter / cache / batch PartitionSpec rules.
+
+Every rule checks divisibility against the live mesh (via ShardCtx.div) and
+falls back to replication on that tensor axis, so *every* (arch x mesh) cell
+lowers and compiles — the fallbacks are recorded in the dry-run artifact.
+
+Naming convention: rules dispatch on the leaf's key name (wq, w_up, ...) and
+the mixer kind of the enclosing layer position (attention wq is (d, H*hd)
+while mLSTM wq is (nh, dh, dh)).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ShardCtx
+
+
+def _path_names(path) -> list:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def _leaf_spec(names: list, shape: tuple, cfg: ArchConfig, sc: ShardCtx) -> P:
+    tp, fs = sc.tp_axis, sc.fsdp_axis
+    d = lambda n, a: sc.div(n, a)  # axis if divisible else None
+    name = names[-1]
+    stacked = names[0] in ("blocks", "enc_blocks")
+    base = shape[1:] if stacked else shape
+    mixer_kind = "attn"
+    if names[0] == "blocks":
+        pos = int(re.match(r"pos(\d+)", names[1]).group(1))
+        mixer_kind = cfg.period[pos].mixer
+    lstm_like = mixer_kind in ("mlstm", "slstm") and "mixer" in names
+
+    def out(*spec):
+        spec = tuple(s if i < len(base) else None for i, s in enumerate(spec))
+        return P(*(((None,) + spec) if stacked else spec))
+
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    if name == "embed":
+        return P(d(base[0], tp), d(base[1], fs))
+    if name == "lm_head":
+        return P(d(base[0], fs), d(base[1], tp))
+    if len(base) == 0 or all(s == 1 for s in base):
+        return out()
+
+    if lstm_like:
+        # xLSTM blocks: FSDP-only (activations replicated over TP; see DESIGN).
+        if name in ("wq", "wk", "wv"):          # (nh, dh, dh)
+            return out(None, d(base[1], fs), None)
+        if name == "r":                          # (nh, dh, 4dh)
+            # sLSTM recurrent weights live INSIDE the sequential time scan.
+            # Replicated by default (~4M params); with the 64-step-chunked
+            # scan they can be FSDP-sharded again — one gather/reduce per
+            # chunk instead of per step (§Perf xlstm it5).
+            if sc.shard_lstm_r:
+                return out(None, d(base[1], fs), None)
+            return out(None, None, None)
+        if name in ("w_up", "w_in"):             # (d, k)
+            return out(d(base[0], fs), None)
+        if name == "w_down":                     # (di, d)
+            return out(None, d(base[1], fs))
+        if name == "w_gate":                     # (di, 2nh)
+            return out(d(base[0], fs), None)
+        return out(*(None,) * len(base))
+
+    if name == "wq":                             # (d, H*hd)
+        return out(d(base[0], fs), tp if sc.div(H, tp) else None)
+    if name in ("wk", "wv"):                     # (d, KV*hd)
+        return out(d(base[0], fs), tp if sc.div(KV, tp) else None)
+    if name == "wo":                             # (H*hd, d)
+        return out(tp if sc.div(H, tp) else None, d(base[1], fs))
+    if name in ("w_gate", "w_up"):               # (d, ff)
+        return out(d(base[0], fs), d(base[1], tp))
+    if name == "w_down":                         # (ff, d)
+        return out(d(base[0], tp), d(base[1], fs))
+    if name == "router":                         # (d, E)
+        return out(d(base[0], fs), None)
+    if name in ("wg", "wu"):                     # (E, d, f) MoE experts
+        return out(None, d(base[1], fs), d(base[2], tp))
+    if name == "wd":                             # (E, f, d)
+        return out(None, d(base[1], tp), d(base[2], fs))
+    if name == "shared_gate":                    # (d, 1)
+        return out(d(base[0], fs), None)
+    # --- mamba ---
+    if name == "w_in":                           # (d, 2di)
+        return out(d(base[0], fs), d(base[1], tp))
+    if name == "conv_w":                         # (Kc, di)
+        return out(None, d(base[1], tp))
+    if name == "w_x":                            # (di, r+2N)
+        return out(d(base[0], tp), None)
+    if name == "w_dt":                           # (r, di)
+        return out(None, d(base[1], tp))
+    if name == "A_log":                          # (di, N)
+        return out(d(base[0], tp), None)
+    if name in ("dt_bias", "D"):                 # (di,)
+        return out(d(base[0], tp))
+    if name == "w_out":                          # (di, d)
+        return out(d(base[0], tp), d(base[1], fs))
+    if name == "out_scale":
+        return out(None)
+    # norms / biases / gates: replicate
+    return out(*(None,) * len(base))
+
+
+def expert_parallel_overrides(specs, cfg: ArchConfig, sc: ShardCtx):
+    """EP mode: shard the expert axis of MoE weights over TP instead of ff."""
+    tp = sc.tp_axis
+
+    def fix(path, spec):
+        names = _path_names(path)
+        if names and names[-1] in ("wg", "wu", "wd") and len(names) > 1 \
+                and names[0] == "blocks":
+            if sc.div(cfg.n_experts, tp):
+                stacked = (None,)
+                if names[-1] in ("wg", "wu"):
+                    return P(*stacked, tp, sc.div(cfg.d_model, sc.fsdp_axis),
+                             None)
+                return P(*stacked, tp, None,
+                         sc.div(cfg.d_model, sc.fsdp_axis))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fix, specs)
+
+
+def param_specs(params_tree, cfg: ArchConfig, sc: ShardCtx,
+                expert_parallel: bool = False):
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(_path_names(path), leaf.shape, cfg, sc),
+        params_tree)
+    if expert_parallel:
+        specs = expert_parallel_overrides(specs, cfg, sc)
+    return specs
+
+
+def cache_specs(cache_tree, cfg: ArchConfig, sc: ShardCtx, batch: int):
+    """Decode-cache specs: batch over DP; KV or S of attention caches over TP."""
+    tp = sc.tp_axis
+    bspec = sc.div(batch, sc.dp_axes)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape  # leading axis = n_periods
+        m = re.match(r"pos(\d+)", names[0]) if names else None
+        if m and cfg.period[int(m.group(1))].mixer in ("mlstm", "slstm"):
+            return P(*((None, bspec) + (None,) * (len(shape) - 2)))
+        if name in ("k", "v", "cross_k", "cross_v"):  # (P, B, S, KV, hd)
+            if sc.div(cfg.n_kv_heads, tp):
+                return P(None, bspec, None, tp, None)
+            return P(None, bspec, sc.div(shape[2], tp), None, None)
+        if name == "conv":                            # (P, B, Kc-1, di)
+            return P(None, bspec, None, sc.div(shape[3], tp))
+        if name == "h" and len(shape) == 4:           # mamba (P, B, di, N)
+            return P(None, bspec, sc.div(shape[2], tp), None)
+        # xLSTM states & misc: batch-sharded only
+        return P(*((None, bspec) + (None,) * (len(shape) - 2)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def batch_specs(batch_tree, sc: ShardCtx, batch: int):
+    bspec = sc.div(batch, sc.dp_axes)
+
+    def spec_for(leaf):
+        return P(*((bspec,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec_for, batch_tree)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from repro.models.common import Runtime, ShardCtx
+from repro.models.transformer import (forward_decode, forward_prefill,
+                                      forward_train, init_cache, init_params)
+
+__all__ = ["Runtime", "ShardCtx", "forward_decode", "forward_prefill",
+           "forward_train", "init_cache", "init_params"]

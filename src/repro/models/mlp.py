@@ -1,0 +1,37 @@
+"""Dense MLPs: SwiGLU (llama-family) and plain GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Runtime, act_fn, dense_init
+
+
+def mlp_init(key, cfg: ArchConfig, rt: Runtime, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d, (d, ff), rt.param_dtype),
+        "w_down": dense_init(ks[1], ff, (ff, d), rt.param_dtype),
+    }
+    if cfg.act == "silu":
+        p["w_gate"] = dense_init(ks[2], d, (d, ff), rt.param_dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, cfg: ArchConfig, rt: Runtime, *,
+        batch: int) -> jax.Array:
+    sc = rt.sc
+    cd = rt.compute_dtype
+    bs = sc.div(batch, sc.dp_axes)
+    ff = p["w_up"].shape[1]
+    up = jnp.einsum("bsd,df->bsf", x.astype(cd), p["w_up"].astype(cd))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x.astype(cd), p["w_gate"].astype(cd))
+        h = act_fn(cfg.act)(gate) * up
+    else:
+        h = act_fn(cfg.act)(up)
+    h = sc.constrain(h, bs, None, sc.div(ff, sc.tp_axis))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+TPU-native design notes (vs. the GShard one-hot dispatch einsum):
+  * dispatch/combine are gathers driven by a per-sequence stable sort of
+    expert assignments, so dispatch costs O(S*k log(S*k)) comparisons and
+    ZERO matmul FLOPs — expert compute is 2*E*C*d*ff with capacity
+    C = ceil(S*k/E * capacity_factor), i.e. active-expert FLOPs x capacity
+    factor (the GShard dispatch einsum would add O(S^2) FLOPs).
+  * all dispatch work is per batch row: the token axis S is never sharded, so
+    routing is collective-free; only the expert matmuls touch sharded weights
+    (FSDP all-gather over "data", TP reduce over "model" — or expert-parallel
+    when the expert count divides the model axis; both are pure weight
+    PartitionSpec choices, see launch/sharding.py).
+  * drop policy: tokens beyond capacity are dropped (weight 0), earliest
+    tokens win (stable sort) — standard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Runtime, act_fn, dense_init
+from repro.models.mlp import mlp, mlp_init
+
+
+def moe_capacity(cfg: ArchConfig, rt: Runtime, S: int) -> int:
+    cf = rt.moe_capacity_factor or cfg.capacity_factor
+    c = int(-(-S * cfg.top_k * cf // cfg.n_experts))  # ceil
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_init(key, cfg: ArchConfig, rt: Runtime) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], d, (d, E), jnp.float32),
+        "wg": dense_init(ks[1], d, (E, d, f), rt.param_dtype),
+        "wu": dense_init(ks[2], d, (E, d, f), rt.param_dtype),
+        "wd": dense_init(ks[3], f, (E, f, d), rt.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, rt,
+                               d_ff=cfg.n_shared_experts * cfg.moe_d_ff)
+        p["shared_gate"] = dense_init(ks[5], d, (d, 1), rt.param_dtype)
+    return p
+
+
+def moe(p: dict, x: jax.Array, cfg: ArchConfig, rt: Runtime, *,
+        batch: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    sc = rt.sc
+    cd = rt.compute_dtype
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, rt, S)
+    N = S * K
+    bs = sc.div(batch, sc.dp_axes)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)            # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch LB + router z) ----------------------------------
+    me = probs.mean(axis=(0, 1))                      # (E,) mean prob
+    ce_frac = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (B * S * K))
+    lb_loss = E * jnp.sum(me * ce_frac)
+    router_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- sort-based dispatch (all per batch row, collective-free) -----------
+    fid = top_e.reshape(B, N)                          # expert id per slot
+    fw = top_w.reshape(B, N)
+    order = jnp.argsort(fid, axis=-1, stable=True)     # (B, N)
+    sid = jnp.take_along_axis(fid, order, axis=-1)
+    stok = order // K                                  # token position, sorted
+    sw = jnp.take_along_axis(fw, order, axis=-1)
+
+    starts = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(E)))(sid)
+    rank = jnp.arange(N)[None, :] - jnp.take_along_axis(starts, sid, axis=-1)
+    keep = rank < C
+    slot = jnp.where(keep, sid * C + rank, E * C)      # overflow -> sentinel
+
+    binds = jnp.arange(B)[:, None]
+    # slot -> source token (sentinel row gathers token 0 with weight 0)
+    slot_tok = jnp.zeros((B, E * C + 1), jnp.int32).at[binds, slot].set(stok)
+    xg = x[binds, slot_tok[:, :E * C]]                 # (B, E*C, d)
+    xg = xg.reshape(B, E, C, d).astype(cd)
+    if rt.moe_expert_parallel:
+        xg = sc.constrain(xg, bs, sc.div(E, sc.tp_axis), None, None)
+
+    # ---- expert compute ------------------------------------------------------
+    gate = jnp.einsum("becd,edf->becf", xg, p["wg"].astype(cd))
+    up = jnp.einsum("becd,edf->becf", xg, p["wu"].astype(cd))
+    h = act_fn(cfg.act)(gate) * up
+    h = sc.constrain(h, bs, None, None, sc.div(cfg.moe_d_ff, sc.tp_axis))
+    yg = jnp.einsum("becf,efd->becd", h, p["wd"].astype(cd))
+    yg = yg.reshape(B, E * C, d)
+
+    # ---- combine (gather back, unsort, weighted sum over k) -----------------
+    y_sorted = yg[binds, jnp.minimum(slot, E * C - 1)]  # (B, N, d)
+    y_sorted = y_sorted * (sw * keep).astype(cd)[..., None]
+    inv_order = jnp.argsort(order, axis=-1)
+    y_flat = jnp.take_along_axis(y_sorted, inv_order[..., None], axis=1)
+    y = y_flat.reshape(B, S, K, d).sum(axis=2)
+
+    if "shared" in p:
+        g = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x.astype(cd), p["shared_gate"].astype(cd)))
+        y = y + g * mlp(p["shared"], x, cfg, rt, batch=batch)
+
+    aux = {"moe_lb_loss": lb_loss, "moe_router_z": router_z,
+           "moe_drop_frac": 1.0 - keep.mean()}
+    return y, aux

@@ -1,0 +1,391 @@
+"""Model assembly: embeddings -> scan over layer periods -> loss / cache.
+
+Heterogeneous stacks (Jamba, xLSTM) are expressed as a repeating *period* of
+LayerSpecs; parameters are stacked with a leading ``n_periods`` axis and the
+period body is applied under a single ``lax.scan`` (optionally rematerialized)
+— this keeps HLO size and compile time independent of depth.
+
+Three entry points:
+  * ``forward_train``   -> (loss, metrics)                  [train_4k]
+  * ``forward_prefill`` -> (last-position logits, cache)    [prefill_32k]
+  * ``forward_decode``  -> (logits, new cache)              [decode_32k/long_500k]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (Runtime, chunked_cross_entropy, dense_init,
+                                 logits_for, norm_apply, norm_init,
+                                 sinusoidal_position_at, sinusoidal_positions)
+from repro.models.mlp import mlp, mlp_init
+from repro.models.moe import moe, moe_init
+
+AUX_KEYS = ("moe_lb_loss", "moe_router_z", "moe_drop_frac")
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def _layer_init(key, spec: LayerSpec, cfg: ArchConfig, rt: Runtime) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {"mixer_norm": norm_init(cfg.norm, cfg.d_model, rt.param_dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_mod.attn_init(next(ks), cfg, rt)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.mamba_init(next(ks), cfg, rt)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.mlstm_init(next(ks), cfg, rt)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.slstm_init(next(ks), cfg, rt)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["cross_norm"] = norm_init(cfg.norm, cfg.d_model, rt.param_dtype)
+        p["cross"] = attn_mod.attn_init(next(ks), cfg, rt)
+    if spec.ffn == "dense":
+        p["ffn_norm"] = norm_init(cfg.norm, cfg.d_model, rt.param_dtype)
+        p["ffn"] = mlp_init(next(ks), cfg, rt)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = norm_init(cfg.norm, cfg.d_model, rt.param_dtype)
+        p["ffn"] = moe_init(next(ks), cfg, rt)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, rt: Runtime) -> dict:
+    d, Vp = cfg.d_model, cfg.padded_vocab()
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": dense_init(keys[0], d, (Vp, d), rt.param_dtype),
+        "final_norm": norm_init(cfg.norm, d, rt.param_dtype),
+        "blocks": {},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], d, (d, Vp), rt.param_dtype)
+    for i, spec in enumerate(cfg.period):
+        pos_keys = jax.random.split(jax.random.fold_in(keys[2], i),
+                                    cfg.n_periods)
+        params["blocks"][f"pos{i}"] = jax.vmap(
+            lambda k, s=spec: _layer_init(k, s, cfg, rt))(pos_keys)
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec("attn", "dense")
+        enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _layer_init(k, enc_spec, cfg, rt))(enc_keys)
+        params["enc_norm"] = norm_init(cfg.norm, d, rt.param_dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Block application
+# --------------------------------------------------------------------------- #
+def _apply_block(spec: LayerSpec, p: dict, x: jax.Array, cfg: ArchConfig,
+                 rt: Runtime, *, batch: int, causal: bool = True,
+                 enc_out: Optional[jax.Array] = None,
+                 positions: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    sc = rt.sc
+    if sc.seq_parallel and sc.tp_axis is not None:
+        # Megatron-SP: residual stream sharded over seq between blocks
+        x = sc.constrain(x, sc.div(batch, sc.dp_axes),
+                         sc.div(x.shape[1], sc.tp_axis), None)
+    h = norm_apply(cfg.norm, x, p["mixer_norm"])
+    if spec.mixer == "attn":
+        mixed = attn_mod.attention(p["mixer"], h, cfg, rt, causal=causal,
+                                   positions=positions)
+    elif spec.mixer == "mamba":
+        mixed = mamba_mod.mamba(p["mixer"], h, cfg, rt, batch=batch)
+    elif spec.mixer == "mlstm":
+        mixed = xlstm_mod.mlstm(p["mixer"], h, cfg, rt, batch=batch)
+    else:
+        mixed = xlstm_mod.slstm(p["mixer"], h, cfg, rt, batch=batch)
+    x = x + mixed
+    if spec.cross_attn and enc_out is not None:
+        h = norm_apply(cfg.norm, x, p["cross_norm"])
+        x = x + attn_mod.attention(p["cross"], h, cfg, rt, causal=False,
+                                   kv_x=enc_out)
+    if spec.ffn != "none":
+        h = norm_apply(cfg.norm, x, p["ffn_norm"])
+        if spec.ffn == "dense":
+            x = x + mlp(p["ffn"], h, cfg, rt, batch=batch)
+        else:
+            y, moe_aux = moe(p["ffn"], h, cfg, rt, batch=batch)
+            x = x + y
+            for k in AUX_KEYS:
+                aux[k] = aux[k] + moe_aux[k].astype(jnp.float32)
+    return x, aux
+
+
+def _remat(fn, rt: Runtime):
+    if rt.remat_policy == "none":
+        return fn
+    if rt.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save only block inputs
+
+
+def _scan_periods(params_blocks: dict, x: jax.Array, cfg: ArchConfig,
+                  rt: Runtime, *, batch: int, causal: bool = True,
+                  enc_out=None, positions=None):
+    def body_fn(x, period_params):
+        aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+        for i, spec in enumerate(cfg.period):
+            x, aux = _apply_block(spec, period_params[f"pos{i}"], x, cfg, rt,
+                                  batch=batch, causal=causal, enc_out=enc_out,
+                                  positions=positions)
+            for k in AUX_KEYS:
+                aux_tot[k] = aux_tot[k] + aux[k]
+        return x, aux_tot
+
+    body = _remat(body_fn, rt)
+
+    def scan_body(carry, period_params):
+        x, aux_acc = carry
+        x, aux = body(x, period_params)
+        return (x, {k: aux_acc[k] + aux[k] for k in AUX_KEYS}), None
+
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    (x, aux), _ = jax.lax.scan(scan_body, (x, aux0), params_blocks)
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head helpers
+# --------------------------------------------------------------------------- #
+def _embed_tokens(params, tokens: jax.Array, cfg: ArchConfig, rt: Runtime
+                  ) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(rt.compute_dtype)
+    return rt.sc.act(x, tokens.shape[0], None, None)
+
+
+def _head_weights(params, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _add_sinusoidal(x: jax.Array, offset=0) -> jax.Array:
+    S, d = x.shape[1], x.shape[2]
+    pos = sinusoidal_positions(S + offset, d)[offset:offset + S]
+    return x + pos[None].astype(x.dtype)
+
+
+def encode_audio(params, frames: jax.Array, cfg: ArchConfig, rt: Runtime,
+                 *, batch: int) -> jax.Array:
+    """Whisper encoder over stubbed post-conv frame embeddings (B, Se, d)."""
+    x = _add_sinusoidal(frames.astype(rt.compute_dtype))
+    enc_cfg_spec = LayerSpec("attn", "dense")
+
+    def body_fn(x, p):
+        x, _ = _apply_block(enc_cfg_spec, p, x, cfg, rt, batch=batch,
+                            causal=False)
+        return x
+
+    body = _remat(body_fn, rt)
+    x, _ = jax.lax.scan(lambda c, p: (body(c, p), None), x,
+                        params["enc_blocks"])
+    return norm_apply(cfg.norm, x, params["enc_norm"])
+
+
+# --------------------------------------------------------------------------- #
+# Train
+# --------------------------------------------------------------------------- #
+def forward_train(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
+                  rt: Runtime) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg, rt)
+    n_prefix = 0
+    enc_out = None
+    if cfg.vision_tokens:  # VLM: prepend stubbed patch embeddings
+        x = jnp.concatenate(
+            [batch["patches"].astype(rt.compute_dtype), x], axis=1)
+        n_prefix = cfg.vision_tokens
+    if cfg.encoder_layers:  # audio: encode stubbed frame embeddings
+        enc_out = encode_audio(params, batch["frames"], cfg, rt, batch=B)
+    if not cfg.rope and not cfg.encoder_layers and cfg.family not in (
+            "hybrid", "ssm"):
+        x = _add_sinusoidal(x)
+    elif cfg.encoder_layers:
+        x = _add_sinusoidal(x)
+
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, aux = _scan_periods(params["blocks"], x, cfg, rt, batch=B,
+                           causal=True, enc_out=enc_out, positions=positions)
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    if n_prefix:
+        x = x[:, n_prefix:]
+    loss_ce, denom = chunked_cross_entropy(
+        x, _head_weights(params, cfg), labels, (labels >= 0), rt,
+        cfg.vocab_size)
+    loss = (loss_ce + 0.01 * aux["moe_lb_loss"] + 0.001 * aux["moe_router_z"])
+    metrics = {"loss": loss, "ce": loss_ce, "tokens": denom, **aux}
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Prefill / decode (serving)
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ArchConfig, rt: Runtime, B: int, S: int) -> dict:
+    """Abstract-shape-compatible cache pytree for one decode step."""
+    cache: dict = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.mixer == "attn":
+            c = attn_mod.attn_cache_init(cfg, rt, B, S)
+        elif spec.mixer == "mamba":
+            c = mamba_mod.mamba_cache_init(cfg, rt, B)
+        elif spec.mixer == "mlstm":
+            c = xlstm_mod.mlstm_cache_init(cfg, rt, B)
+        else:
+            c = xlstm_mod.slstm_cache_init(cfg, rt, B)
+        if spec.cross_attn:
+            Se, KV, hd = cfg.encoder_seq, cfg.n_kv_heads, cfg.hd
+            c = dict(c)
+            c["cross_k"] = jnp.zeros((B, Se, KV, hd), rt.compute_dtype)
+            c["cross_v"] = jnp.zeros((B, Se, KV, hd), rt.compute_dtype)
+        cache[f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), c)
+    return cache
+
+
+def forward_decode(params: dict, tokens: jax.Array, cache: dict,
+                   cache_len: jax.Array, cfg: ArchConfig, rt: Runtime
+                   ) -> Tuple[jax.Array, dict]:
+    """tokens (B, 1); cache from ``init_cache``; cache_len scalar int32."""
+    B = tokens.shape[0]
+    x = _embed_tokens(params, tokens, cfg, rt)
+    if not cfg.rope and cfg.family not in ("hybrid", "ssm"):
+        pos_row = sinusoidal_position_at(cache_len, x.shape[-1])
+        x = x + pos_row[None, None].astype(x.dtype)
+
+    def scan_body(x, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.period):
+            p = period_params[f"pos{i}"]
+            c = period_cache[f"pos{i}"]
+            h = norm_apply(cfg.norm, x, p["mixer_norm"])
+            if spec.mixer == "attn":
+                mixed, nc = attn_mod.attn_decode(
+                    p["mixer"], h, {"k": c["k"], "v": c["v"]}, cache_len,
+                    cfg, rt)
+                nc = {**c, **nc}
+            elif spec.mixer == "mamba":
+                mixed, nc = mamba_mod.mamba_decode(p["mixer"], h, c, cfg, rt)
+            elif spec.mixer == "mlstm":
+                mixed, nc = xlstm_mod.mlstm_decode(p["mixer"], h, c, cfg, rt)
+            else:
+                mixed, nc = xlstm_mod.slstm_decode(p["mixer"], h, c, cfg, rt)
+            x = x + mixed
+            if spec.cross_attn:
+                h = norm_apply(cfg.norm, x, p["cross_norm"])
+                y, _ = attn_mod.attn_decode(
+                    p["cross"], h, {}, cache_len, cfg, rt,
+                    cross_kv=(c["cross_k"], c["cross_v"]))
+                x = x + y
+            if spec.ffn == "dense":
+                h = norm_apply(cfg.norm, x, p["ffn_norm"])
+                x = x + mlp(p["ffn"], h, cfg, rt, batch=B)
+            elif spec.ffn == "moe":
+                h = norm_apply(cfg.norm, x, p["ffn_norm"])
+                y, _ = moe(p["ffn"], h, cfg, rt, batch=B)
+                x = x + y
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    logits = logits_for(x, _head_weights(params, cfg), rt, cfg.vocab_size)
+    return logits[:, 0], new_cache
+
+
+def forward_prefill(params: dict, batch: Dict[str, jax.Array],
+                    cfg: ArchConfig, rt: Runtime,
+                    cache_size: Optional[int] = None
+                    ) -> Tuple[jax.Array, dict]:
+    """Build a KV cache by scanning the decoder over the prompt.
+
+    For lowering simplicity and exact decode-path parity we run the full
+    sequence through the train-style forward to produce last-position logits,
+    and (for attention layers) return the cache produced by that pass.  SSM
+    states are produced by the chunked scans' final carries.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg, rt)
+    enc_out = None
+    if cfg.vision_tokens:
+        x = jnp.concatenate(
+            [batch["patches"].astype(rt.compute_dtype), x], axis=1)
+    if cfg.encoder_layers:
+        enc_out = encode_audio(params, batch["frames"], cfg, rt, batch=B)
+        x = _add_sinusoidal(x)
+    elif not cfg.rope and cfg.family not in ("hybrid", "ssm"):
+        x = _add_sinusoidal(x)
+
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    # the cache covers the full internal sequence (incl. any VLM prefix)
+    S_cache = max(cache_size or 0, x.shape[1])
+    cache = init_cache(cfg, rt, B, S_cache)
+
+    def _pad_kv(t):
+        pad = S_cache - t.shape[1]
+        if pad == 0:
+            return t
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def scan_body(x, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.period):
+            p = period_params[f"pos{i}"]
+            c = period_cache[f"pos{i}"]
+            h = norm_apply(cfg.norm, x, p["mixer_norm"])
+            nc = c
+            if spec.mixer == "attn":
+                mixed, kv = attn_mod.attention_with_kv(
+                    p["mixer"], h, cfg, rt, positions=positions)
+                nc = {**c, "k": _pad_kv(kv[0]), "v": _pad_kv(kv[1])}
+            elif spec.mixer == "mamba":
+                mixed, st = mamba_mod.mamba_with_state(
+                    p["mixer"], h, cfg, rt, batch=B)
+                nc = st
+            elif spec.mixer == "mlstm":
+                mixed, st = xlstm_mod.mlstm_with_state(
+                    p["mixer"], h, cfg, rt, batch=B)
+                nc = st
+            else:
+                mixed, st = xlstm_mod.slstm_with_state(
+                    p["mixer"], h, cfg, rt, batch=B)
+                nc = st
+            x = x + mixed
+            if spec.cross_attn:
+                h = norm_apply(cfg.norm, x, p["cross_norm"])
+                y, ckv = attn_mod.attention_with_kv(
+                    p["cross"], h, cfg, rt, kv_x=enc_out, causal=False)
+                x = x + y
+                nc = {**nc, "cross_k": ckv[0], "cross_v": ckv[1]}
+            if spec.ffn == "dense":
+                hh = norm_apply(cfg.norm, x, p["ffn_norm"])
+                x = x + mlp(p["ffn"], hh, cfg, rt, batch=B)
+            elif spec.ffn == "moe":
+                hh = norm_apply(cfg.norm, x, p["ffn_norm"])
+                y, _ = moe(p["ffn"], hh, cfg, rt, batch=B)
+                x = x + y
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    last = x[:, -1:]
+    logits = logits_for(last, _head_weights(params, cfg), rt, cfg.vocab_size)
+    return logits[:, 0], new_cache

@@ -1,0 +1,53 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Distributed-optimization trick for the cross-pod (DCN) gradient reduction:
+per-tensor int8 quantization cuts AR wire bytes 4x (vs fp32) with error
+feedback (Seide et al. / EF-SGD) carrying the quantization residual into the
+next step, which preserves convergence (tested in tests/test_optim.py).
+
+Two layers:
+  * ``ef_compress_tree``: numerics transform on the gradient pytree (what the
+    train step applies — in SPMD the reduction itself is XLA-inserted, so the
+    quantization models the compressed cross-pod collective),
+  * ``compressed_psum``: an explicit shard_map int8 all-reduce over a named
+    axis, used when the pod axis is manual (demonstrated on the test mesh).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_quantize(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (dequantized int8 approximation, new error-feedback buffer)."""
+    target = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(target)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, target - deq
+
+
+def ef_compress_tree(grads, ef_state):
+    out = jax.tree.map(ef_quantize, grads, ef_state)
+    new_grads = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_ef
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-on-the-wire all-reduce over a named (manual) mesh axis.
+
+    Quantize locally, all-gather the int8 payloads + fp32 scales (the wire
+    carries 1 byte/element instead of 4), and reduce after dequantization —
+    the jax-native equivalent of a compressed DCN all-reduce for the pod
+    axis.  Exact to within quantization error (tested).
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)              # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)          # (g,) fp32 scalars
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))

@@ -1,0 +1,7 @@
+from repro.scheduler.base import Scheduler
+from repro.scheduler.distributed import FaultInjection, TaskQueueScheduler
+from repro.scheduler.local import (ProcessScheduler, SerialScheduler,
+                                   ThreadScheduler)
+
+__all__ = ["Scheduler", "FaultInjection", "TaskQueueScheduler",
+           "ProcessScheduler", "SerialScheduler", "ThreadScheduler"]

@@ -1,0 +1,26 @@
+"""Scheduler abstraction (paper §2.4).
+
+Mango's key design decision: the optimizer never talks to a scheduling
+framework — it calls a user *objective function* that takes a batch of
+configurations and returns partial ``(evals, params)``.  A ``Scheduler``
+here is a factory that wraps a per-trial callable into such an objective,
+implementing whatever execution/fault semantics the deployment needs.
+
+The ``TaskQueueScheduler`` in ``distributed.py`` reproduces the Celery-on-
+Kubernetes production setup from the paper (Listing 4): tasks enqueued to a
+worker pool, per-batch deadline, stragglers/failed workers dropped from the
+returned lists, optional retries.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Protocol, Tuple
+
+TrialFn = Callable[[Dict[str, Any]], float]
+Objective = Callable[[List[Dict[str, Any]]],
+                     Tuple[List[float], List[Dict[str, Any]]]]
+
+
+class Scheduler(Protocol):
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        """Wrap a single-config callable into Mango's batch objective."""
+        ...

@@ -1,0 +1,136 @@
+"""Task-queue scheduler reproducing the paper's Celery/Kubernetes deployment.
+
+Semantics modeled on Listing 4 (``train_clf.delay(par)`` + ``process.get()``):
+
+  * tasks are pushed to a queue consumed by a pool of long-lived workers,
+  * a per-batch deadline bounds the ``get()`` — stragglers are abandoned,
+  * worker failures (injected for testing: ``failure_rate``) surface as
+    dropped results, not batch failures,
+  * optional ``max_retries`` re-enqueues failed tasks (beyond-paper, matches
+    Celery's ``task_acks_late`` production configuration),
+  * an async API (``submit`` / ``gather``) used by the asynchronous tuner.
+
+Fault injection exists so the test-suite can drill the tuner's partial-result
+contract under worker crashes and stragglers deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.scheduler.base import Objective, TrialFn
+
+
+@dataclasses.dataclass
+class FaultInjection:
+    failure_rate: float = 0.0       # P(worker raises) per task
+    straggler_rate: float = 0.0     # P(task sleeps straggler_delay)
+    straggler_delay: float = 1.0    # seconds
+    seed: int = 0
+
+
+class _Task:
+    __slots__ = ("params", "result", "error", "done", "retries")
+
+    def __init__(self, params):
+        self.params = params
+        self.result = None
+        self.error = None
+        self.done = threading.Event()
+        self.retries = 0
+
+
+class TaskQueueScheduler:
+    """Celery-like distributed task queue with a local worker pool."""
+
+    def __init__(self, n_workers: int = 4, timeout: Optional[float] = None,
+                 max_retries: int = 0,
+                 faults: Optional[FaultInjection] = None):
+        self.n_workers = n_workers
+        self.timeout = timeout
+        self.max_retries = max_retries
+        self.faults = faults or FaultInjection()
+        self._rng = random.Random(self.faults.seed)
+        self._q: "queue.Queue[Optional[Tuple[_Task, TrialFn]]]" = queue.Queue()
+        self._workers: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._started = False
+        self.stats = {"completed": 0, "failed": 0, "retried": 0,
+                      "straggled": 0}
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self):
+        with self._lock:
+            if self._started:
+                return
+            self._started = True
+            for i in range(self.n_workers):
+                t = threading.Thread(target=self._worker_loop,
+                                     name=f"mango-worker-{i}", daemon=True)
+                t.start()
+                self._workers.append(t)
+
+    def shutdown(self):
+        self._stop.set()
+        for _ in self._workers:
+            self._q.put(None)
+
+    def _worker_loop(self):
+        while not self._stop.is_set():
+            item = self._q.get()
+            if item is None:
+                return
+            task, fn = item
+            try:
+                with self._lock:
+                    fail = self._rng.random() < self.faults.failure_rate
+                    straggle = self._rng.random() < self.faults.straggler_rate
+                if straggle:
+                    self.stats["straggled"] += 1
+                    time.sleep(self.faults.straggler_delay)
+                if fail:
+                    raise RuntimeError("injected worker failure")
+                task.result = float(fn(task.params))
+                self.stats["completed"] += 1
+                task.done.set()
+            except Exception as e:  # noqa: BLE001
+                if task.retries < self.max_retries:
+                    task.retries += 1
+                    self.stats["retried"] += 1
+                    self._q.put((task, fn))
+                else:
+                    task.error = e
+                    self.stats["failed"] += 1
+                    task.done.set()
+
+    # ------------------------------------------------------------- async API
+    def submit(self, fn: TrialFn, params: Dict[str, Any]) -> _Task:
+        self.start()
+        task = _Task(params)
+        self._q.put((task, fn))
+        return task
+
+    def gather(self, tasks: List[_Task], timeout: Optional[float] = None
+               ) -> Tuple[List[float], List[Dict[str, Any]]]:
+        deadline = None if timeout is None else time.time() + timeout
+        evals, params = [], []
+        for t in tasks:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.time()))
+            if t.done.wait(remaining) and t.error is None:
+                evals.append(t.result)
+                params.append(t.params)
+        return evals, params
+
+    # --------------------------------------------------------- batch objective
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        def objective(params_list):
+            tasks = [self.submit(trial_fn, par) for par in params_list]
+            return self.gather(tasks, timeout=self.timeout)
+
+        return objective

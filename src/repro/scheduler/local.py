@@ -1,0 +1,85 @@
+"""Local schedulers: serial (paper Listing 3), thread pool, process pool."""
+from __future__ import annotations
+
+import concurrent.futures as cf
+from typing import Any, Dict, List, Optional
+
+from repro.scheduler.base import Objective, TrialFn
+
+
+class SerialScheduler:
+    """Sequential evaluation; failed trials are dropped (partial results)."""
+
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        def objective(params_list):
+            evals, params = [], []
+            for par in params_list:
+                try:
+                    evals.append(float(trial_fn(par)))
+                    params.append(par)
+                except Exception:
+                    pass  # dropped -> tuner never observes it
+            return evals, params
+
+        return objective
+
+
+class ThreadScheduler:
+    """Thread-pool evaluation with a per-batch deadline.
+
+    Results that miss the deadline (stragglers) are NOT waited for — the
+    batch returns partially, exactly the paper's out-of-order/missing-results
+    contract.  Straggler futures are abandoned (daemon threads).
+    """
+
+    def __init__(self, n_workers: int = 4, timeout: Optional[float] = None):
+        self.n_workers = n_workers
+        self.timeout = timeout
+
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        def objective(params_list):
+            evals, params = [], []
+            ex = cf.ThreadPoolExecutor(max_workers=self.n_workers)
+            futs = {ex.submit(trial_fn, par): par for par in params_list}
+            try:
+                for fut in cf.as_completed(futs, timeout=self.timeout):
+                    par = futs[fut]
+                    try:
+                        evals.append(float(fut.result()))
+                        params.append(par)
+                    except Exception:
+                        pass
+            except cf.TimeoutError:
+                pass  # deadline: return what we have
+            ex.shutdown(wait=False, cancel_futures=True)
+            return evals, params
+
+        return objective
+
+
+class ProcessScheduler:
+    """Process-pool evaluation (trial_fn must be picklable)."""
+
+    def __init__(self, n_workers: int = 2, timeout: Optional[float] = None):
+        self.n_workers = n_workers
+        self.timeout = timeout
+
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        def objective(params_list):
+            evals, params = [], []
+            with cf.ProcessPoolExecutor(max_workers=self.n_workers) as ex:
+                futs = {ex.submit(trial_fn, par): par for par in params_list}
+                try:
+                    for fut in cf.as_completed(futs, timeout=self.timeout):
+                        par = futs[fut]
+                        try:
+                            evals.append(float(fut.result()))
+                            params.append(par)
+                        except Exception:
+                            pass
+                except cf.TimeoutError:
+                    for fut in futs:
+                        fut.cancel()
+            return evals, params
+
+        return objective

@@ -1,0 +1,139 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics) function:
+gradient accumulation over microbatches (lax.scan), global-norm clipping,
+AdamW update — ready for ``jax.jit`` with donated state.
+
+Microbatch count is auto-chosen (unless overridden) so the per-chip live
+activation estimate stays under a budget — this is what lets 80-layer
+internvl2-76b fit the v5e 16GB HBM at train_4k (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.common import Runtime
+from repro.models.transformer import forward_decode, forward_train
+from repro.optim.adamw import AdamWConfig, opt_init, opt_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    n_microbatches: int = 0  # 0 -> auto
+    grad_compression: str = "none"  # none | int8_ef
+
+
+def auto_microbatches(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime,
+                      act_budget_bytes: float = 2.5e9) -> int:
+    """Pick #microbatches so saved period-boundary activations fit the budget.
+
+    With remat policy "full", the live backward-pass footprint per chip is
+    ~ n_layers * B_micro_local * S * d_model * 2 bytes (boundary residuals).
+    """
+    dp = max(rt.sc.dp, 1)
+    b_local = max(shape.global_batch // dp, 1)
+    per_b = cfg.n_layers * shape.seq_len * cfg.d_model * 2
+    n = 1
+    while b_local % (2 * n) == 0 and (b_local // n) * per_b > act_budget_bytes:
+        n *= 2
+    return max(n, 1)
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, hyper: TrainHyper,
+                    n_microbatches: int = 1) -> Callable:
+    n_micro = max(n_microbatches, 1)
+
+    def loss_fn(params, micro_batch):
+        return forward_train(params, micro_batch, cfg, rt)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        params = state["params"]
+
+        # Microbatch layout (B/n, n, ...): keeps the DP-sharded rows of each
+        # microbatch contiguous on their owning chip (no resharding per step).
+        def micro_slices(t):
+            B = t.shape[0]
+            return t.reshape((B // n_micro, n_micro) + t.shape[1:])
+
+        micro = jax.tree.map(micro_slices, batch)
+
+        def accum(carry, m_idx):
+            g_acc, m_acc = carry
+            mb = jax.tree.map(
+                lambda t: jax.lax.dynamic_index_in_dim(
+                    t, m_idx, axis=1, keepdims=False), micro)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                g_acc, grads)
+            m_acc = jax.tree.map(lambda a, m: a + m / n_micro, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": 0.0, "ce": 0.0, "tokens": 0.0, "moe_lb_loss": 0.0,
+              "moe_router_z": 0.0, "moe_drop_frac": 0.0}
+        m0 = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), m0)
+        if n_micro == 1:
+            (grads, metrics), _ = accum(
+                (g0, m0), jnp.zeros((), jnp.int32))
+        else:
+            (grads, metrics), _ = jax.lax.scan(
+                accum, (g0, m0), jnp.arange(n_micro))
+
+        new_state = {}
+        if hyper.grad_compression == "int8_ef":
+            from repro.optim.compression import ef_compress_tree
+            grads, new_ef = ef_compress_tree(grads, state["ef"])
+            new_state["ef"] = new_ef
+
+        new_params, new_opt, opt_metrics = opt_update(
+            hyper.opt, params, grads, state["opt"])
+        new_state.update(params=new_params, opt=new_opt)
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ArchConfig, rt: Runtime,
+                     grad_compression: str = "none") -> Dict[str, Any]:
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg, rt)
+    state = {"params": params, "opt": opt_init(params)}
+    if grad_compression == "int8_ef":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def make_decode_step(cfg: ArchConfig, rt: Runtime) -> Callable:
+    def decode_step(params, tokens, cache, cache_len):
+        logits, new_cache = forward_decode(params, tokens, cache, cache_len,
+                                           cfg, rt)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        return next_tok, new_cache
+
+    return decode_step
+
+
+def make_prefill_step(cfg: ArchConfig, rt: Runtime,
+                      cache_size: Optional[int] = None) -> Callable:
+    from repro.models.transformer import forward_prefill
+
+    def prefill_step(params, batch):
+        logits, cache = forward_prefill(params, batch, cfg, rt,
+                                        cache_size=cache_size)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step

@@ -1,0 +1,42 @@
+"""The loop-aware HLO analyzer against a program with known FLOPs."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_scan_flops_counted_with_trip_multiplier():
+    code = """
+        import jax, jax.numpy as jnp, json
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import hlo_cost
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        def f(a, b):
+            def body(c, _):
+                return c @ b, None
+            out, _ = jax.lax.scan(body, a, None, length=5)
+            return out
+        A = jax.ShapeDtypeStruct((1024, 2048), jnp.bfloat16)
+        B = jax.ShapeDtypeStruct((2048, 2048), jnp.bfloat16)
+        sa = NamedSharding(mesh, P("data", None))
+        sb = NamedSharding(mesh, P(None, "model"))
+        comp = jax.jit(f, in_shardings=(sa, sb)).lower(A, B).compile()
+        res = hlo_cost.analyze_module(comp.as_text(), 8)
+        print(json.dumps({"flops": res["flops"],
+                          "ag": res["coll"]["all-gather"]["count"]}))
+    """
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, out.stderr
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # per-device: 5 iterations x 2 * (1024/2) * 2048 * (2048/4)
+    expected = 5 * 2 * 512 * 2048 * 512
+    assert abs(res["flops"] - expected) / expected < 0.05
+    assert res["ag"] >= 5  # the FSDP-style gather runs every iteration

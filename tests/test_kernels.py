@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gp_acquisition.ops import ucb_scores
+from repro.kernels.gp_acquisition.ref import matern52, ucb_scores_ref
+from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,causal,dtype", [
+    (2, 4, 2, 256, 64, True, jnp.float32),
+    (1, 8, 8, 128, 128, True, jnp.float32),
+    (2, 6, 2, 256, 64, False, jnp.float32),
+    (1, 9, 3, 128, 64, True, jnp.float32),
+    (1, 4, 1, 128, 64, True, jnp.bfloat16),   # MQA + bf16
+    (2, 2, 2, 64, 32, True, jnp.float32),
+])
+def test_flash_attention(B, H, KV, S, hd, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,S,di,N,bd,ck", [
+    (2, 128, 64, 8, 32, 32),
+    (1, 64, 128, 16, 64, 16),
+    (1, 96, 32, 4, 32, 32),
+])
+def test_ssm_scan(B, S, di, N, bd, ck):
+    ks = jax.random.split(KEY, 3)
+    A = jax.random.uniform(ks[0], (B, S, di, N), jnp.float32, 0.5, 0.999)
+    Bx = jax.random.normal(ks[1], (B, S, di, N), jnp.float32) * 0.1
+    C = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    out = ssm_scan(A, Bx, C, block_d=bd, chunk=ck)
+    ref = ssm_scan_ref(A, Bx, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,NH,S,dh,L", [
+    (2, 2, 128, 64, 32),
+    (1, 4, 64, 128, 16),
+    (1, 1, 64, 32, 64),   # single chunk == whole sequence
+])
+def test_mlstm_chunk(B, NH, S, dh, L):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, NH, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, NH, S, dh), jnp.float32) * (dh ** -0.5)
+    v = jax.random.normal(ks[2], (B, NH, S, dh), jnp.float32)
+    li = jax.random.normal(ks[3], (B, NH, S), jnp.float32)
+    lf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, NH, S)) - 1.0)
+    out = mlstm_chunk(q, k, v, li, lf, chunk=L)
+    ref = mlstm_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4)
+
+
+@pytest.mark.parametrize("n,d,S", [(64, 5, 500), (32, 3, 300), (128, 11, 257)])
+def test_gp_acquisition(n, d, S):
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(n, d)).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    mask[n - n // 4:] = 0.0
+    ls = np.full(d, 0.5, np.float32)
+    var, noise, beta = 1.3, 0.01, 4.0
+    K = np.asarray(matern52(jnp.asarray(X / ls), jnp.asarray(X / ls),
+                            1.0, var))
+    K = K * mask[:, None] * mask[None, :]
+    K[np.diag_indices(n)] = np.where(mask > 0, var + noise + 1e-6, 1.0)
+    Kinv = np.linalg.inv(K).astype(np.float32)
+    y = (rng.normal(size=n) * mask).astype(np.float32)
+    alpha = Kinv @ y
+    C = rng.uniform(size=(S, d)).astype(np.float32)
+    out = ucb_scores(C, X, mask, Kinv, alpha, ls, var, noise, beta)
+    ref = np.asarray(ucb_scores_ref(
+        jnp.asarray(C / ls), jnp.asarray(X / ls), jnp.asarray(mask),
+        jnp.asarray(Kinv), jnp.asarray(alpha), 1.0, var, noise, beta))
+    np.testing.assert_allclose(out, ref, atol=1e-4)

@@ -1,0 +1,101 @@
+"""Per-arch smoke tests (reduced configs): shapes, finiteness, serving parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (Runtime, forward_decode, forward_prefill,
+                          forward_train, init_params)
+
+
+def _batch(cfg, key, B=2, S=16, dtype=jnp.float32):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                      jnp.int32),
+         "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                      jnp.int32)}
+    if cfg.vision_tokens:
+        b["patches"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model), dtype)
+    if cfg.encoder_layers:
+        b["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), dtype)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, rt32):
+    """One forward/loss on CPU: correct shapes, no NaNs (assignment spec)."""
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, rt32)
+    batch = _batch(cfg, key)
+    loss, metrics = jax.jit(
+        lambda p, b: forward_train(p, b, cfg, rt32))(params, batch)
+    assert np.isfinite(float(loss))
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.5  # ~ln(V) at init
+    assert float(metrics["tokens"]) == batch["tokens"].size
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "jamba-v0.1-52b",
+                                  "xlstm-1.3b", "whisper-large-v3"])
+def test_prefill_decode_parity(arch, rt32):
+    """Decode after prefill == one full forward (exact cache semantics)."""
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    # no-drop MoE capacity: capacity dropping is batch-composition dependent,
+    # so exact parity requires unbounded capacity (see test_moe_parity_*)
+    rt32 = dataclasses.replace(rt32, moe_capacity_factor=64.0)
+    params = init_params(key, cfg, rt32)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size, jnp.int32)
+    full = _batch(cfg, key, B, S + 1)
+    full["tokens"] = toks
+    pre = dict(full)
+    pre["tokens"] = toks[:, :S]
+    vt = cfg.vision_tokens
+    full_logits, _ = forward_prefill(params, full, cfg, rt32)
+    _, cache = forward_prefill(params, pre, cfg, rt32,
+                               cache_size=S + 1 + vt)
+    dec_logits, _ = forward_decode(params, toks[:, S:S + 1], cache,
+                                   jnp.int32(S + vt), cfg, rt32)
+    np.testing.assert_allclose(np.asarray(full_logits),
+                               np.asarray(dec_logits), atol=5e-3)
+
+
+def test_moe_parity_needs_capacity(rt32):
+    """MoE drop policy: parity holds exactly when capacity is unbounded."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    rt = dataclasses.replace(rt32, moe_capacity_factor=64.0)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg, rt)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size, jnp.int32)
+    full_logits, _ = forward_prefill(params, {"tokens": toks}, cfg, rt)
+    _, cache = forward_prefill(params, {"tokens": toks[:, :S]}, cfg, rt,
+                               cache_size=S + 1)
+    dec_logits, _ = forward_decode(params, toks[:, S:S + 1], cache,
+                                   jnp.int32(S), cfg, rt)
+    np.testing.assert_allclose(np.asarray(full_logits),
+                               np.asarray(dec_logits), atol=5e-3)
+
+
+def test_moe_drop_fraction_reported(rt32):
+    cfg = get_config("olmoe-1b-7b", reduced=True)
+    rt = dataclasses.replace(rt32, moe_capacity_factor=0.5)  # force drops
+    key = jax.random.PRNGKey(3)
+    params = init_params(key, cfg, rt)
+    _, metrics = forward_train(params, _batch(cfg, key, 2, 32), cfg, rt)
+    assert float(metrics["moe_drop_frac"]) > 0.0
+    assert float(metrics["moe_lb_loss"]) > 0.0
+
+
+def test_long_context_flags():
+    """long_500k applicability matches DESIGN.md §Arch-applicability."""
+    from repro.configs import SHAPES
+    runs = {a: SHAPES["long_500k"].applicable(get_config(a))[0]
+            for a in ARCH_IDS}
+    assert runs["jamba-v0.1-52b"] and runs["xlstm-1.3b"]
+    assert sum(runs.values()) == 2  # everything else is full attention

@@ -1,0 +1,84 @@
+import time
+
+import numpy as np
+import pytest
+from scipy.stats import uniform
+
+from repro.core import Tuner
+from repro.core.async_tuner import AsyncTuner
+from repro.scheduler import (FaultInjection, SerialScheduler,
+                             TaskQueueScheduler, ThreadScheduler)
+
+SPACE = {"x": uniform(0, 1)}
+
+
+def trial(p):
+    return -(p["x"] - 0.5) ** 2
+
+
+def test_serial_scheduler_drops_failures():
+    def flaky(p):
+        if p["x"] > 0.8:
+            raise RuntimeError("boom")
+        return trial(p)
+
+    obj = SerialScheduler().make_objective(flaky)
+    batch = [{"x": v} for v in (0.1, 0.9, 0.5, 0.95)]
+    evals, params = obj(batch)
+    assert len(evals) == 2
+    assert all(p["x"] <= 0.8 for p in params)
+
+
+def test_thread_scheduler_straggler_deadline():
+    def slow(p):
+        if p["x"] > 0.5:
+            time.sleep(5.0)  # straggler
+        return trial(p)
+
+    obj = ThreadScheduler(n_workers=4, timeout=0.5).make_objective(slow)
+    t0 = time.time()
+    evals, params = obj([{"x": v} for v in (0.1, 0.2, 0.9, 0.8)])
+    assert time.time() - t0 < 2.0  # did not wait for stragglers
+    assert len(evals) == 2
+
+
+def test_taskqueue_fault_injection_and_retry():
+    sched = TaskQueueScheduler(
+        n_workers=4, timeout=2.0, max_retries=2,
+        faults=FaultInjection(failure_rate=0.5, seed=7))
+    obj = sched.make_objective(trial)
+    evals, params = obj([{"x": v} for v in np.linspace(0, 1, 12)])
+    # with 2 retries at 50% failure, nearly all should eventually land
+    assert len(evals) >= 8
+    assert sched.stats["retried"] > 0
+    sched.shutdown()
+
+
+def test_taskqueue_no_faults_full_batch():
+    sched = TaskQueueScheduler(n_workers=2)
+    evals, params = sched.make_objective(trial)(
+        [{"x": v} for v in (0.1, 0.5, 0.9)])
+    assert len(evals) == 3
+    sched.shutdown()
+
+
+def test_end_to_end_tuning_under_faults():
+    sched = TaskQueueScheduler(
+        n_workers=4, timeout=1.0, max_retries=1,
+        faults=FaultInjection(failure_rate=0.25, straggler_rate=0.15,
+                              straggler_delay=3.0, seed=11))
+    res = Tuner(SPACE, sched.make_objective(trial),
+                dict(optimizer="bayesian", batch_size=4, num_iteration=6,
+                     seed=0, mc_samples=1000, fit_steps=10)).maximize()
+    assert res.best_objective > -0.01
+    assert res.n_failed > 0  # faults actually happened
+    sched.shutdown()
+
+
+def test_async_tuner_continuous_batching():
+    sched = TaskQueueScheduler(n_workers=4)
+    res = AsyncTuner(SPACE, trial, sched, num_evals=12, batch_size=4,
+                     seed=0, mc_samples=800).maximize()
+    assert len(res["objective_values"]) == 12
+    assert res["best_objective"] > -0.05
+    sched.shutdown()

@@ -1,0 +1,96 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.stats import expon, norm, randint, uniform
+
+from repro.core.spaces import ParamSpace, loguniform
+
+
+def test_listing2_svm_space():
+    """The paper's Listing 2 space (SVM: C, gamma, kernel)."""
+    space = ParamSpace({
+        "C": uniform(0.1, 10),
+        "gamma": loguniform(-3, 3),
+        "kernel": ["rbf", "sigmoid", "poly"],
+    })
+    rng = np.random.default_rng(0)
+    samples = space.sample(100, rng)
+    assert len(samples) == 100
+    for s in samples:
+        assert 0.1 <= s["C"] <= 10.1
+        assert 10 ** -3 <= s["gamma"] <= 10 ** 0
+        assert s["kernel"] in ("rbf", "sigmoid", "poly")
+    enc = space.encode(samples)
+    assert enc.shape == (100, 1 + 1 + 3)  # one-hot categorical
+    assert (enc >= 0).all() and (enc <= 1).all()
+
+
+def test_listing1_xgboost_space():
+    """The paper's Listing 1 space (XGBoost)."""
+    space = ParamSpace({
+        "learning_rate": uniform(0, 1),
+        "gamma": uniform(0, 5),
+        "max_depth": range(1, 10),
+        "n_estimators": range(1, 300),
+        "booster": ["gbtree", "gblinear", "dart"],
+    })
+    rng = np.random.default_rng(1)
+    s = space.sample(50, rng)
+    assert all(1 <= x["max_depth"] <= 9 for x in s)
+    assert all(1 <= x["n_estimators"] <= 299 for x in s)
+    assert space.domain_size > 1e5  # ~10^6 per the paper
+
+
+def test_scipy_distribution_breadth():
+    space = ParamSpace({"a": norm(0, 1), "b": expon(), "c": randint(2, 30)})
+    rng = np.random.default_rng(2)
+    samples = space.sample(64, rng)
+    enc = space.encode(samples)
+    assert enc.shape == (64, 3)
+    assert np.isfinite(enc).all()
+
+
+def test_constants_and_numeric_lists():
+    space = ParamSpace({"const": 7, "sizes": [16, 32, 64, 128]})
+    rng = np.random.default_rng(3)
+    s = space.sample(10, rng)
+    assert all(x["const"] == 7 for x in s)
+    assert all(x["sizes"] in (16, 32, 64, 128) for x in s)
+    assert space.encode(s).shape == (10, 1)  # numeric list is ordinal
+
+
+def test_errors():
+    with pytest.raises(ValueError):
+        ParamSpace({})
+    with pytest.raises(ValueError):
+        ParamSpace({"x": []})
+    with pytest.raises(ValueError):
+        ParamSpace({"x": range(5, 5)})
+
+
+def test_mc_samples_heuristic_scales():
+    small = ParamSpace({"x": uniform(0, 1)})
+    big = ParamSpace({f"x{i}": uniform(0, 1) for i in range(8)})
+    assert small.mc_samples() < big.mc_samples()
+    assert 2000 <= small.mc_samples() <= 32768
+    assert big.mc_samples(batch_size=8) <= 32768
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 60), st.integers(0, 2 ** 31 - 1))
+def test_encode_in_unit_cube_property(n_cont, n_samples, seed):
+    space_dict = {f"c{i}": uniform(i, 2 * i + 1) for i in range(n_cont)}
+    space_dict["k"] = ["a", "b"]
+    space_dict["r"] = range(1, 17)
+    space = ParamSpace(space_dict)
+    rng = np.random.default_rng(seed)
+    samples = space.sample(n_samples, rng)
+    enc = space.encode(samples)
+    assert enc.shape == (n_samples, space.dim)
+    assert (enc >= -1e-9).all() and (enc <= 1 + 1e-9).all()
+
+
+def test_loguniform_cdf_ppf_roundtrip():
+    lu = loguniform(-4, 3)
+    q = np.linspace(0.01, 0.99, 17)
+    np.testing.assert_allclose(lu.cdf(lu.ppf(q)), q, atol=1e-9)

@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+
+from repro.core.kmeans import kmeans_assign
+from repro.core.strategies import (ClusteringStrategy, HallucinationStrategy,
+                                   RandomStrategy)
+
+
+def _data(n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(n, 2)).astype(np.float32)
+    y = -((X[:, 0] - 0.6) ** 2 + (X[:, 1] - 0.4) ** 2)
+    C = rng.uniform(size=(600, 2)).astype(np.float32)
+    return X, y, C
+
+
+def test_hallucination_batch_is_diverse():
+    X, y, C = _data()
+    s = HallucinationStrategy(2, 1e4, fit_steps=15)
+    picked = s.propose(X, y, C, batch_size=5)
+    assert len(set(picked)) == 5
+    pts = C[picked]
+    # hallucination must spread the batch: no two picks collapse together
+    d = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+    np.fill_diagonal(d, 1.0)
+    assert d.min() > 1e-3
+
+
+def test_clustering_batch_unique_and_spread():
+    X, y, C = _data(seed=1)
+    s = ClusteringStrategy(2, 1e4, fit_steps=15)
+    picked = s.propose(X, y, C, batch_size=5)
+    assert len(set(picked)) == 5
+
+
+def test_batch1_reduces_to_ucb_argmax():
+    X, y, C = _data(seed=2)
+    h = HallucinationStrategy(2, 1e4, fit_steps=15)
+    c = ClusteringStrategy(2, 1e4, fit_steps=15)
+    assert h.propose(X, y, C, 1)[0] == c.propose(X, y, C, 1)[0]
+
+
+def test_random_strategy_no_gp():
+    s = RandomStrategy()
+    picked = s.propose(None, [], np.zeros((100, 2)), 8, seed=0)
+    assert len(set(picked)) == 8
+
+
+def test_kmeans_partitions():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal(0, 0.05, (30, 2)),
+                        rng.normal(1, 0.05, (30, 2))]).astype(np.float32)
+    w = np.ones(60, np.float32)
+    a = kmeans_assign(X, w, 2, seed=0)
+    assert set(a.tolist()) == {0, 1}
+    # the two blobs end up in different clusters
+    assert len(set(a[:30].tolist())) == 1
+    assert a[0] != a[45]
