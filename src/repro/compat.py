@@ -1,0 +1,63 @@
+"""Feature-detection shims for JAX API drift.
+
+The repo targets a range of JAX releases; two APIs moved underneath us:
+
+  * ``jax.experimental.pallas.tpu.CompilerParams`` was called
+    ``TPUCompilerParams`` in older releases (and is absent in very old ones).
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` only
+    exist in newer releases; older ``make_mesh`` takes (shapes, names) only.
+
+Everything here is resolved once at import time so the hot paths pay no
+per-call getattr cost.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def _resolve_compiler_params_cls():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pallas TPU backend not available at all
+        return None
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+_COMPILER_PARAMS_CLS = _resolve_compiler_params_cls()
+
+
+def tpu_compiler_params(**kwargs) -> Optional[object]:
+    """Build pallas-TPU compiler params under whichever name this JAX has.
+
+    Returns None (pallas_call's default) when no params class exists, so
+    call sites can pass the result straight to ``compiler_params=``.
+    """
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # older releases only ship the experimental entry point
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape: Sequence[int], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AXIS_TYPE is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes)

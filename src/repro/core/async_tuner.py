@@ -3,10 +3,17 @@
 The synchronous tuner waits for a whole batch before refitting.  With
 heterogeneous trial times (the common case for NAS/big-model tuning), workers
 idle at every barrier.  ``AsyncTuner`` keeps exactly ``batch_size`` trials in
-flight: whenever one completes it is observed, the GP is refit, pending
-trials are *hallucinated* (GP-BUCB semantics extend naturally to the async
-setting — pending configs contribute variance contraction but no mean
-update), and one replacement trial is dispatched.
+flight: whenever one completes it is observed, pending trials are
+*hallucinated* (GP-BUCB semantics extend naturally to the async setting —
+pending configs contribute variance contraction but no mean update), and one
+replacement trial is dispatched.
+
+Completions are absorbed through the incremental GP path: each new
+observation is an O(n^2) Cholesky append (full O(n^3) hyperparameter refit
+only every ``refit_every`` completions), and the replacement pick runs on the
+fused device-resident proposal program — the seed implementation refit the
+GP from scratch and re-hallucinated every pending trial on *every*
+completion.
 """
 from __future__ import annotations
 
@@ -15,9 +22,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.acquisition import adaptive_beta, ucb
 from repro.core.spaces import ParamSpace
-from repro.core.strategies import HallucinationStrategy
+from repro.core.strategies import FusedHallucinationStrategy
 from repro.scheduler.distributed import TaskQueueScheduler
 
 
@@ -28,7 +34,7 @@ class AsyncTuner:
                  num_evals: int = 40, batch_size: int = 4,
                  initial_random: int = 4, seed: int = 0,
                  mc_samples: Optional[int] = None,
-                 poll_interval: float = 0.01):
+                 poll_interval: float = 0.01, refit_every: int = 8):
         self.space = ParamSpace(param_space)
         self.trial_fn = trial_fn
         self.sched = scheduler
@@ -37,11 +43,14 @@ class AsyncTuner:
         self.initial_random = initial_random
         self.mc_samples = mc_samples
         self.poll = poll_interval
+        self.refit_every = refit_every
         self._rng = np.random.default_rng(seed)
 
     def maximize(self) -> Dict[str, Any]:
         t0 = time.time()
-        strat = HallucinationStrategy(self.space.dim, self.space.domain_size)
+        strat = FusedHallucinationStrategy(
+            self.space.dim, self.space.domain_size,
+            refit_every=self.refit_every)
         X_obs: List[Dict] = []
         y_obs: List[float] = []
         pending = {}  # task -> params
@@ -79,15 +88,18 @@ class AsyncTuner:
                     self.batch_size)
                 cands = self.space.sample(n_mc, self._rng)
                 C = self.space.encode(cands)
-                st = strat.gp.fit(self.space.encode(X_obs),
-                                  np.asarray(y_obs))
+                # incremental absorb of completions (O(n^2) appends; full
+                # refit only every refit_every observations)
+                st = strat.gp.observe(self.space.encode(X_obs),
+                                      np.asarray(y_obs))
+                st = strat.gp.ensure_capacity(st, len(pending) + 1)
                 for pp in pending.values():  # hallucinate in-flight trials
                     st = strat.gp.hallucinate(
                         st, self.space.encode([pp])[0])
-                mu, sd = strat.gp.predict(C, st)
-                beta = adaptive_beta(len(y_obs), self.space.domain_size,
-                                     batch_index=len(pending))
-                launch(cands[int(np.argmax(ucb(mu, sd, beta)))])
+                # fused device program; t = n_obs + n_pending reproduces the
+                # batch_index term of the adaptive-beta schedule
+                picks = strat.pick_from_state(st, C, 1)
+                launch(cands[picks[0]])
 
         best = int(np.argmax(y_obs)) if y_obs else -1
         return {

@@ -1,9 +1,13 @@
 """Parallel batch-selection strategies (paper §2.3).
 
-  * ``hallucination``: Batched GP Bandits / GP-BUCB (Desautels et al. 2014) —
-    sequentially pick argmax UCB, then *hallucinate* the observation at the
-    posterior mean so the variance contracts and the next pick explores a
-    different region (information gain across the batch is maximized).
+  * ``bayesian`` (default): the fused GP-BUCB path — one jit'd device
+    program per batch (``gp.fused_propose``) on top of incremental O(n^2)
+    Cholesky observation appends.
+  * ``hallucination_ref``: Batched GP Bandits / GP-BUCB (Desautels et al.
+    2014) as a numpy-facing Python loop — sequentially pick argmax UCB, then
+    *hallucinate* the observation at the posterior mean so the variance
+    contracts and the next pick explores a different region.  Kept as the
+    reference implementation the fused path is tested against.
   * ``clustering``: (Groves & Pyzer-Knapp 2018) — compute the acquisition
     surface on the MC candidates, keep the top quantile, k-means it into
     ``batch_size`` spatially distinct clusters, return each cluster's argmax.
@@ -17,10 +21,12 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.acquisition import adaptive_beta, ucb
-from repro.core.gp import GaussianProcess
+from repro.core.gp import (GaussianProcess, fused_propose,
+                           fused_propose_pallas)
 from repro.core.kmeans import kmeans_assign
 
 
@@ -28,15 +34,20 @@ class BaseStrategy:
     needs_gp = True
 
     def __init__(self, dim: int, domain_size: float, fit_steps: int = 40,
-                 use_pallas: bool = False):
-        self.gp = GaussianProcess(dim, fit_steps=fit_steps)
+                 use_pallas: bool = False, pallas_interpret: bool = True,
+                 refit_every: int = 8):
+        self.gp = GaussianProcess(dim, fit_steps=fit_steps,
+                                  refit_every=refit_every,
+                                  track_kinv=use_pallas)
         self.domain_size = domain_size
         self.use_pallas = use_pallas
+        self.pallas_interpret = pallas_interpret
 
     def _predict(self, st, C: np.ndarray):
         if self.use_pallas:
             from repro.kernels.gp_acquisition import ops as gp_ops
-            return gp_ops.gp_mean_std(st, C)
+            return gp_ops.gp_mean_std(st, C,
+                                      interpret=self.pallas_interpret)
         return self.gp.predict(C, st)
 
     def propose(self, X: np.ndarray, y: np.ndarray, candidates: np.ndarray,
@@ -63,13 +74,52 @@ class HallucinationStrategy(BaseStrategy):
         return picked
 
 
+class FusedHallucinationStrategy(BaseStrategy):
+    """GP-BUCB on the fused device-resident hot path (the default).
+
+    Observations are absorbed incrementally (O(n^2) Cholesky appends, full
+    hyperparameter refit every ``refit_every`` new points) and the whole
+    batch loop runs as a single jit'd ``lax.fori_loop`` — picks identical
+    candidate indices to ``HallucinationStrategy`` on fixed seeds.
+    """
+
+    def propose(self, X, y, candidates, batch_size, seed=0):
+        st = self.gp.observe(X, y)
+        st = self.gp.ensure_capacity(st, batch_size)
+        return self.pick_from_state(st, candidates, batch_size)
+
+    def pick_from_state(self, st, candidates, batch_size):
+        """Window + dispatch the fused program against an explicit state
+        (``AsyncTuner`` passes one with pending trials hallucinated in)."""
+        # active window: a 64-multiple slice covering n + batch_size rows.
+        # The leading principal block of L is the Cholesky of the leading
+        # block of K, so slicing is exact — it just avoids paying the
+        # power-of-two padded size (up to 2n) in the O(n^2 S) posterior.
+        n_pad = st.X.shape[0]
+        na = min(n_pad, max(16, -(-(st.n + batch_size) // 64) * 64))
+        C = jnp.asarray(np.ascontiguousarray(candidates, dtype=np.float32))
+        args = (jnp.asarray(st.X[:na]), jnp.asarray(st.y[:na]),
+                jnp.asarray(st.mask[:na]))
+        tail = (C, st.ls, st.var, st.noise, jnp.int32(st.n),
+                jnp.float32(self.domain_size))
+        if self.use_pallas:
+            picks = fused_propose_pallas(*args, st.L[:na, :na],
+                                         st.Kinv[:na, :na], *tail,
+                                         batch_size=batch_size,
+                                         interpret=self.pallas_interpret)
+        else:
+            picks = fused_propose(*args, st.L[:na, :na], *tail,
+                                  batch_size=batch_size)
+        return [int(i) for i in np.asarray(picks)]
+
+
 class ClusteringStrategy(BaseStrategy):
     def __init__(self, *args, top_frac: float = 0.2, **kwargs):
         super().__init__(*args, **kwargs)
         self.top_frac = top_frac
 
     def propose(self, X, y, candidates, batch_size, seed=0):
-        st = self.gp.fit(X, y)
+        st = self.gp.observe(X, y)
         mu, sd = self._predict(st, candidates)
         beta = adaptive_beta(len(y), self.domain_size)
         acq = ucb(mu, sd, beta)
@@ -117,8 +167,9 @@ class RandomStrategy(BaseStrategy):
 
 
 STRATEGIES = {
-    "bayesian": HallucinationStrategy,     # mango's default name
-    "hallucination": HallucinationStrategy,
+    "bayesian": FusedHallucinationStrategy,     # mango's default name
+    "hallucination": FusedHallucinationStrategy,
+    "hallucination_ref": HallucinationStrategy,  # numpy reference path
     "clustering": ClusteringStrategy,
     "random": RandomStrategy,
 }

@@ -11,7 +11,10 @@ Config keys (mirroring Mango's ``conf_dict``):
   optimizer ("bayesian" | "clustering" | "random"),
   domain_size (None -> heuristic), mc_samples (None -> heuristic),
   seed (0), early_stopping (callable(results) -> bool),
-  checkpoint_path (None), fit_steps (40), use_pallas (False).
+  checkpoint_path (None), fit_steps (40), use_pallas (False),
+  pallas_interpret (True; set False on real TPU for the compiled kernel),
+  refit_every (8; full GP hyperparameter re-tune every N new observations —
+  in between, observations extend the Cholesky incrementally in O(n^2)).
 """
 from __future__ import annotations
 
@@ -29,7 +32,8 @@ from repro.core.strategies import STRATEGIES
 DEFAULTS = dict(batch_size=1, num_iteration=20, initial_random=2,
                 optimizer="bayesian", domain_size=None, mc_samples=None,
                 seed=0, early_stopping=None, checkpoint_path=None,
-                fit_steps=40, use_pallas=False)
+                fit_steps=40, use_pallas=False, pallas_interpret=True,
+                refit_every=8)
 
 
 @dataclasses.dataclass
@@ -82,6 +86,8 @@ class Tuner:
         self._iteration = 0
         self._n_failed = 0
         self._sign = 1.0
+        self._strat = None
+        self._gp_n_fit = 0   # obs count at the GP's last full fit (resume)
         ckpt = self.conf["checkpoint_path"]
         if ckpt and Path(ckpt).exists():
             self.load_state(ckpt)
@@ -111,8 +117,17 @@ class Tuner:
     def _strategy(self):
         cls = STRATEGIES[self.conf["optimizer"]]
         domain = self.conf["domain_size"] or self.space.domain_size
-        return cls(self.space.dim, domain, fit_steps=self.conf["fit_steps"],
-                   use_pallas=self.conf["use_pallas"])
+        strat = cls(self.space.dim, domain, fit_steps=self.conf["fit_steps"],
+                    use_pallas=self.conf["use_pallas"],
+                    pallas_interpret=self.conf["pallas_interpret"],
+                    refit_every=self.conf["refit_every"])
+        if self._gp_n_fit and self._y and strat.needs_gp:
+            # replay the checkpointed fit/append schedule so resumed runs
+            # produce the same remaining proposals as uninterrupted ones
+            strat.gp.restore(self.space.encode(self._X),
+                             np.asarray(self._y, np.float32),
+                             self._gp_n_fit)
+        return strat
 
     def _propose(self, strategy, batch_size: int) -> List[Dict]:
         n_mc = self.conf["mc_samples"] or self.space.mc_samples(batch_size)
@@ -143,7 +158,7 @@ class Tuner:
         self._sign = sign
         t0 = time.time()
         bs = self.conf["batch_size"]
-        strategy = self._strategy()
+        strategy = self._strat = self._strategy()
 
         if self._iteration == 0 and not self._y:
             n0 = max(self.conf["initial_random"], 1)
@@ -186,6 +201,7 @@ class Tuner:
         path = self.conf["checkpoint_path"]
         if not path:
             return
+        gp = getattr(self._strat, "gp", None)
         state = {
             "iteration": self._iteration,
             "X": [_to_jsonable(x) for x in self._X],
@@ -194,6 +210,7 @@ class Tuner:
             "n_failed": self._n_failed,
             "sign": self._sign,
             "rng_state": self._rng.bit_generator.state,
+            "gp_n_fit": gp.n_fit if gp is not None else 0,
         }
         p = Path(path)
         tmp = p.with_suffix(".tmp")
@@ -208,5 +225,6 @@ class Tuner:
         self._best_trace = state["best_trace"]
         self._n_failed = state["n_failed"]
         self._sign = state.get("sign", 1.0)
+        self._gp_n_fit = state.get("gp_n_fit", 0)
         self._rng = np.random.default_rng()
         self._rng.bit_generator.state = state["rng_state"]

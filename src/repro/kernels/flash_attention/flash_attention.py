@@ -79,6 +79,8 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 
     from jax.experimental.pallas import tpu as pltpu
 
+    from repro.compat import tpu_compiler_params
+
     kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
                                block_q=block_q, block_k=block_k, n_k=n_k)
     qr = q.reshape(B * H, Sq, hd)
@@ -103,7 +105,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
             pltpu.VMEM((block_q, 1), jnp.float32),   # l
             pltpu.VMEM((block_q, hd), jnp.float32),  # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)

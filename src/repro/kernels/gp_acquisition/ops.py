@@ -48,21 +48,25 @@ def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
     return np.asarray(out)[:S]
 
 
-def gp_mean_std(st, cands):
+def gp_mean_std(st, cands, interpret: bool = True):
     """GPState-facing adapter returning (mu, sd) in the original y scale."""
-    L = np.asarray(st.L)
-    n = L.shape[0]
-    eye = np.eye(n, dtype=np.float32)
-    import scipy.linalg as sla
-    Linv = sla.solve_triangular(L, eye, lower=True)
-    Kinv = Linv.T @ Linv
-    alpha = Kinv @ np.asarray(st.y, np.float32)
+    if getattr(st, "Kinv", None) is not None:
+        # incrementally-maintained inverse (track_kinv): no O(n^3) solve here
+        Kinv = np.asarray(st.Kinv)
+    else:
+        L = np.asarray(st.L)
+        eye = np.eye(L.shape[0], dtype=np.float32)
+        import scipy.linalg as sla
+        Linv = sla.solve_triangular(L, eye, lower=True)
+        Kinv = Linv.T @ Linv
+    alpha = Kinv @ (np.asarray(st.y, np.float32)
+                    * np.asarray(st.mask, np.float32))
     var = float(st.var)
     noise = float(st.noise)
     # beta=0 -> returns mu; run twice (mu, then ucb with beta=1) to get sd
     mu = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
-                    var, noise, 0.0)
+                    var, noise, 0.0, interpret=interpret)
     u1 = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
-                    var, noise, 1.0)
+                    var, noise, 1.0, interpret=interpret)
     sd = np.maximum(u1 - mu, 0.0)
     return mu * st.y_std + st.y_mean, sd * st.y_std

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG = -1e30
 
 
@@ -102,7 +104,7 @@ def mlstm_chunk(q, k, v, logi, logf, *, chunk: int = 64,
             pltpu.VMEM((1, dh), jnp.float32),   # n
             pltpu.VMEM((1, 1), jnp.float32),    # m
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, lir, lfr)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _ssm_kernel(a_ref, b_ref, c_ref, out_ref, h_ref, *, ck: int):
     si = pl.program_id(2)
@@ -69,7 +71,7 @@ def ssm_scan(Abar, Bx, Cc, *, block_d: int = 512, chunk: int = 64,
                                lambda b, d, s: (b, s, d)),
         out_shape=jax.ShapeDtypeStruct((B, S, di), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Abar, Bx, Cc[:, :, None, :])

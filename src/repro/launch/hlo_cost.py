@@ -114,12 +114,42 @@ def _split_computations(hlo: str) -> Dict[str, List[str]]:
     return comps
 
 
-def _operand_names(line: str) -> List[str]:
-    m = re.search(r"\b[\w\-]+\((?P<args>[^)]*)\)", line)
-    if not m:
+def _split_top_level(args: str) -> List[str]:
+    """Split on commas outside [] / {} — shape dims and layout annotations
+    (``f32[512,2048]{1,0}``) contain commas of their own."""
+    parts, cur, depth = [], [], 0
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    # anchor on "<op>(" rather than the first "name(" — tiled layout
+    # annotations like f32[128,128]{1,0:T(8,128)} put a paren group in the
+    # result type before the call
+    i = line.find(op + "(")
+    if i < 0:
         return []
+    j = i + len(op) + 1
+    depth, k = 1, j
+    while k < len(line) and depth:
+        if line[k] == "(":
+            depth += 1
+        elif line[k] == ")":
+            depth -= 1
+        k += 1
     names = []
-    for arg in m.group("args").split(","):
+    for arg in _split_top_level(line[j:k - 1]):
         mm = re.search(r"%?([\w.\-]+)\s*$", arg.strip())
         if mm:
             names.append(mm.group(1))
@@ -132,7 +162,8 @@ def _parse_ops(lines: List[str]) -> List[OpRec]:
         m = _OP_RE.match(line)
         if m:
             out.append(OpRec(m.group("name"), m.group("op"),
-                             m.group("result"), _operand_names(line), line))
+                             m.group("result"),
+                             _operand_names(line, m.group("op")), line))
     return out
 
 

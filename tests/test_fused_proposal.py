@@ -1,0 +1,169 @@
+"""Fused device-resident GP-BUCB proposal: parity with the numpy reference
+path, incremental-Cholesky observation appends, and checkpoint-resume
+determinism."""
+import json
+
+import numpy as np
+import pytest
+from scipy.stats import uniform
+
+from repro.core import Tuner
+from repro.core.gp import GaussianProcess
+from repro.core.strategies import (FusedHallucinationStrategy,
+                                   HallucinationStrategy, STRATEGIES)
+
+
+def _data(n=20, seed=0, n_cand=600):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(n, 2)).astype(np.float32)
+    y = -((X[:, 0] - 0.6) ** 2 + (X[:, 1] - 0.4) ** 2)
+    C = rng.uniform(size=(n_cand, 2)).astype(np.float32)
+    return X, y, C
+
+
+def test_default_strategy_is_fused():
+    assert STRATEGIES["bayesian"] is FusedHallucinationStrategy
+    assert STRATEGIES["hallucination_ref"] is HallucinationStrategy
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("batch_size", [1, 4, 8])
+def test_fused_matches_python_loop_reference(seed, batch_size):
+    """The jit'd fori-loop picks the same candidate indices as the seed
+    Python-loop HallucinationStrategy on fixed seeds."""
+    X, y, C = _data(seed=seed)
+    ref = HallucinationStrategy(2, 1e4, fit_steps=15)
+    fused = FusedHallucinationStrategy(2, 1e4, fit_steps=15)
+    assert (fused.propose(X, y, C, batch_size)
+            == ref.propose(X, y, C, batch_size))
+
+
+def test_fused_parity_across_incremental_iterations():
+    """Parity holds through the incremental observe path too when the fused
+    GP re-tunes hypers every iteration (refit_every=1 == reference refit
+    schedule)."""
+    X, y, C = _data(seed=3)
+    ref = HallucinationStrategy(2, 1e4, fit_steps=15)
+    fused = FusedHallucinationStrategy(2, 1e4, fit_steps=15, refit_every=1)
+    Xl, yl = list(X), list(y)
+    for _ in range(3):
+        Xa, ya = np.asarray(Xl, np.float32), np.asarray(yl, np.float32)
+        picks = fused.propose(Xa, ya, C, batch_size=3)
+        assert picks == ref.propose(Xa, ya, C, batch_size=3)
+        for i in picks:
+            Xl.append(C[i])
+            yl.append(-((C[i][0] - 0.6) ** 2 + (C[i][1] - 0.4) ** 2))
+
+
+def test_incremental_observe_appends_without_refit():
+    X, y, C = _data(seed=4)
+    gp = GaussianProcess(2, fit_steps=15, refit_every=100)
+    gp.observe(X, y)
+    hypers0 = (np.asarray(gp.state.ls).copy(), float(gp.state.var))
+    # grow past the padded-buffer boundary (n=20 pads to 32)
+    rng = np.random.default_rng(0)
+    X2 = np.concatenate([X, rng.uniform(size=(20, 2)).astype(np.float32)])
+    y2 = np.concatenate([y, rng.normal(size=20).astype(np.float32)])
+    st = gp.observe(X2, y2)
+    assert st.n == 40 and gp.n_fit == 20          # appended, not refit
+    assert np.array_equal(np.asarray(st.ls), hypers0[0])
+    # the incremental Cholesky matches a from-scratch factorization
+    ref = GaussianProcess(2, fit_steps=15)
+    ref.fit(X2, y2)
+    mu_inc, sd_inc = gp.predict(C[:50], st)
+    # same hypers are required for a meaningful comparison: refit with the
+    # frozen hypers by predicting through the appended state vs a fresh
+    # Cholesky of the same kernel matrix
+    from repro.core.gp import cholesky_masked
+    import dataclasses
+    import jax.numpy as jnp
+    # rebuild standardized y exactly as the incremental state holds it
+    L_full = cholesky_masked(jnp.asarray(st.X), jnp.asarray(st.mask),
+                             st.ls, st.var, st.noise)
+    st_full = dataclasses.replace(st, L=L_full)
+    mu_ref, sd_ref = gp.predict(C[:50], st_full)
+    np.testing.assert_allclose(mu_inc, mu_ref, atol=5e-3)
+    np.testing.assert_allclose(sd_inc, sd_ref, atol=5e-3)
+
+
+def test_degenerate_standardization_guard_symmetric_on_restore():
+    """Constant initial observations leave y_std ~ 1e-6; a later differing
+    value must force an immediate re-tune — and a checkpoint-resume replay
+    (restore + observe) must reach the same refit decision as the
+    uninterrupted incremental run."""
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(6, 2)).astype(np.float32)
+    y = np.zeros(6, np.float32)
+    X2 = np.concatenate([X, rng.uniform(size=(2, 2)).astype(np.float32)])
+    y2 = np.concatenate([y, np.array([0.1, 0.2], np.float32)])
+
+    live = GaussianProcess(2, fit_steps=10, refit_every=100)
+    live.observe(X, y)
+    assert live.state.y_std < 1e-5
+    live.observe(X2, y2)                    # wild rows arrive incrementally
+    assert live.n_fit == 8                  # guard fired -> full refit
+
+    resumed = GaussianProcess(2, fit_steps=10, refit_every=100)
+    resumed.restore(X2, y2, n_fit=6)        # replay appends the wild rows
+    resumed.observe(X2, y2)                 # next propose's observe
+    assert resumed.n_fit == 8               # same refit decision
+    np.testing.assert_array_equal(np.asarray(resumed.state.ls),
+                                  np.asarray(live.state.ls))
+
+
+def test_observe_refits_on_prefix_change_or_shrink():
+    X, y, _ = _data(seed=5)
+    gp = GaussianProcess(2, fit_steps=15, refit_every=100)
+    gp.observe(X, y)
+    assert gp.n_fit == 20
+    y_mut = y.copy()
+    y_mut[0] += 1.0                      # history rewritten -> full refit
+    gp.observe(X, y_mut)
+    assert gp.n_fit == 20
+    gp.observe(X[:10], y_mut[:10])       # shrink -> full refit
+    assert gp.n_fit == 10
+
+
+def test_fused_pallas_threading():
+    """use_pallas routes scoring through the gp_acquisition kernel; the
+    first pick (pure scoring, no hallucination yet) matches the chol path
+    and batches stay valid/unique.  Later slots may differ by float32
+    near-ties between the Kinv quadratic form and the triangular solve."""
+    X, y, C = _data(seed=0)
+    fused = FusedHallucinationStrategy(2, 1e4, fit_steps=15)
+    pallas = FusedHallucinationStrategy(2, 1e4, fit_steps=15,
+                                        use_pallas=True)
+    assert pallas.propose(X, y, C, 1) == fused.propose(X, y, C, 1)
+    picks = pallas.propose(X, y, C, 6)
+    assert len(set(picks)) == 6
+    assert all(0 <= p < len(C) for p in picks)
+
+
+SPACE = {"x": uniform(0, 1), "y": uniform(0, 1)}
+FAST = dict(mc_samples=1200, fit_steps=15)
+
+
+def _quad_objective(batch):
+    return [-(p["x"] - 0.7) ** 2 - (p["y"] - 0.2) ** 2 for p in batch], \
+        list(batch)
+
+
+def test_checkpoint_resume_reproduces_remaining_proposals(tmp_path):
+    """A Tuner resumed from checkpoint_path proposes the same remaining
+    configurations as an uninterrupted run (GP fit/append schedule is
+    replayed from the checkpointed gp_n_fit)."""
+    conf = dict(optimizer="bayesian", num_iteration=6, batch_size=2, seed=7,
+                refit_every=4, **FAST)
+    full = Tuner(SPACE, _quad_objective, conf).maximize()
+
+    ckpt = tmp_path / "t.json"
+    conf_i = {**conf, "checkpoint_path": str(ckpt), "num_iteration": 3}
+    Tuner(SPACE, _quad_objective, conf_i).maximize()
+    assert json.loads(ckpt.read_text())["iteration"] == 3
+    resumed = Tuner(SPACE, _quad_objective,
+                    {**conf_i, "num_iteration": 6}).maximize()
+    assert resumed.iterations == 6
+    full_xy = [(p["x"], p["y"]) for p in full.params_tried]
+    res_xy = [(p["x"], p["y"]) for p in resumed.params_tried]
+    assert res_xy == full_xy
+    assert resumed.objective_values == full.objective_values

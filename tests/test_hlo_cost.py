@@ -30,7 +30,10 @@ def test_scan_flops_counted_with_trip_multiplier():
         print(json.dumps({"flops": res["flops"],
                           "ag": res["coll"]["all-gather"]["count"]}))
     """
+    # JAX_PLATFORMS=cpu: see tests/test_sharding.py — a stripped env lets
+    # the TPU PJRT plugin probe GCP metadata and hang past the timeout.
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu",
            "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=300, env=env)

@@ -14,7 +14,11 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
 def _run(code: str, n_dev: int = 8) -> str:
+    # JAX_PLATFORMS=cpu: these are forced-host-device simulations; without
+    # it a stripped env lets the TPU PJRT plugin probe GCP instance metadata
+    # (30 retries per variable) and the subprocess blows its timeout.
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}",
+           "JAX_PLATFORMS": "cpu",
            "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=900,
@@ -92,6 +96,7 @@ def test_compressed_psum_shard_map():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
+        from repro.compat import shard_map
         from repro.launch.mesh import make_test_mesh
         from repro.optim.compression import compressed_psum
         from jax.sharding import PartitionSpec as P
@@ -100,7 +105,7 @@ def test_compressed_psum_shard_map():
         x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
                         jnp.float32)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"),
+        @partial(shard_map, mesh=mesh, in_specs=P("pod"),
                  out_specs=P("pod"))
         def f(xs):
             return compressed_psum(xs[0], "pod")[None]
