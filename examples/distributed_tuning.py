@@ -5,15 +5,20 @@ a task-queue scheduler with a worker pool, per-batch deadline, injected
 worker failures and stragglers — the tuner observes only the partial results
 that make the deadline, exactly the paper's fault-tolerance contract.
 
+Both tuners drive the same ask/tell core with the same per-trial function;
+the sync one takes the scheduler in its config, the async one keeps
+``batch_size`` trials continuously in flight (no barrier), waking on the
+scheduler's completion condition and checkpointing after every completion.
+
 Run:  PYTHONPATH=src:. python examples/distributed_tuning.py
 """
+import tempfile
 import time
 
 import numpy as np
 from scipy.stats import randint, uniform
 
-from repro.core import Tuner
-from repro.core.async_tuner import AsyncTuner
+from repro.core import AsyncTuner, Tuner
 from repro.scheduler import FaultInjection, TaskQueueScheduler
 
 
@@ -63,9 +68,9 @@ if __name__ == "__main__":
         n_workers=8, timeout=1.0, max_retries=1,
         faults=FaultInjection(failure_rate=0.2, straggler_rate=0.1,
                               straggler_delay=5.0, seed=1))
-    tuner = Tuner(param_space, sched.make_objective(knn_accuracy),
-                  dict(optimizer="clustering", batch_size=8,
-                       num_iteration=8, seed=0))
+    tuner = Tuner(param_space, knn_accuracy,
+                  dict(scheduler=sched, optimizer="clustering",
+                       batch_size=8, num_iteration=8, seed=0))
     res = tuner.maximize()
     print(f"[sync ] best acc {res.best_objective:.4f} with "
           f"{res.best_params['n_neighbors']} neighbours "
@@ -75,12 +80,17 @@ if __name__ == "__main__":
     print(f"[sync ] scheduler stats: {sched.stats}")
     sched.shutdown()
 
-    # async mode: continuous batching — no barrier between batches
+    # async mode: continuous batching — no barrier between batches.  The
+    # checkpoint (written after every completion, in-flight trials
+    # included) would let a killed run resume to identical proposals.
     sched2 = TaskQueueScheduler(n_workers=8)
-    ares = AsyncTuner(param_space, knn_accuracy, sched2, num_evals=40,
-                      batch_size=8, seed=0).maximize()
-    print(f"[async] best acc {ares['best_objective']:.4f} after "
-          f"{len(ares['objective_values'])} evals in "
-          f"{ares['wall_time_s']:.1f}s")
+    with tempfile.TemporaryDirectory() as td:
+        ares = AsyncTuner(param_space, knn_accuracy, sched2, num_evals=40,
+                          batch_size=8, seed=0,
+                          checkpoint_path=f"{td}/async_ckpt.json"
+                          ).maximize()
+    print(f"[async] best acc {ares.best_objective:.4f} after "
+          f"{len(ares.objective_values)} evals in "
+          f"{ares.wall_time_s:.1f}s ({ares.n_failed} failed)")
     sched2.shutdown()
     assert res.best_objective > 0.9

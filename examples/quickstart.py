@@ -5,6 +5,10 @@ JAX (sklearn is not available offline): hyperparameters C (inverse
 regularization) and gamma (RBF width) — the same two-parameter space as the
 paper's SVM example.
 
+Uses the unified API: a *per-trial* function plus a scheduler in the config
+(``scheduler.make_objective`` wraps it into the paper's batch objective
+behind the scenes; passing a batch objective directly still works).
+
 Run:  PYTHONPATH=src:. python examples/quickstart.py
 """
 import jax
@@ -13,6 +17,7 @@ import numpy as np
 from scipy.stats import uniform
 
 from repro.core import Tuner, loguniform
+from repro.scheduler import SerialScheduler
 
 
 def make_blobs(seed=0, n=240):
@@ -57,18 +62,15 @@ param_space = {
 }
 
 
-# --- the paper's Listing 3 objective: batch in, (evals, params) out --------
-def objective(params_list):
-    evals, params = [], []
-    for par in params_list:
-        evals.append(rbf_classifier_accuracy(par["C"], par["gamma"]))
-        params.append(par)
-    return evals, params
+# --- the paper's Listing 3 trial: one config in, one score out -------------
+def trial(par):
+    return rbf_classifier_accuracy(par["C"], par["gamma"])
 
 
 if __name__ == "__main__":
-    tuner = Tuner(param_space, objective,
-                  dict(optimizer="bayesian", batch_size=3, num_iteration=10,
+    tuner = Tuner(param_space, trial,
+                  dict(scheduler=SerialScheduler(), optimizer="bayesian",
+                       batch_size=3, num_iteration=10,
                        initial_random=2, seed=0))
     result = tuner.maximize()
     print(f"best accuracy: {result.best_objective:.4f}")

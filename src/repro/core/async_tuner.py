@@ -1,112 +1,127 @@
-"""Asynchronous tuner (beyond-paper): continuous batching of trials.
+"""Asynchronous tuner: the completion-event driver over ``AskTellOptimizer``.
 
-The synchronous tuner waits for a whole batch before refitting.  With
+The synchronous tuner waits for a whole batch before proposing again.  With
 heterogeneous trial times (the common case for NAS/big-model tuning), workers
-idle at every barrier.  ``AsyncTuner`` keeps exactly ``batch_size`` trials in
-flight: whenever one completes it is observed, pending trials are
-*hallucinated* (GP-BUCB semantics extend naturally to the async setting —
-pending configs contribute variance contraction but no mean update), and one
-replacement trial is dispatched.
+idle at every barrier.  ``AsyncTuner`` keeps up to ``batch_size`` trials in
+flight: whenever one completes it is told back to the shared ask/tell core
+and one replacement trial is asked — the core hands the full pending set to
+the fused GP-BUCB program, which hallucinates the in-flight rows *inside*
+its jit'd ``lax.fori_loop`` (one device dispatch per replacement pick; the
+seed implementation ran one O(n^2) program per pending trial).
 
-Completions are absorbed through the incremental GP path: each new
-observation is an O(n^2) Cholesky append (full O(n^3) hyperparameter refit
-only every ``refit_every`` completions), and the replacement pick runs on the
-fused device-resident proposal program — the seed implementation refit the
-GP from scratch and re-hallucinated every pending trial on *every*
-completion.
+The event loop blocks on the scheduler's completion condition
+(``wait_any``), waking exactly when a trial finishes — no ``time.sleep``
+polling.  Any scheduler works: native async ones (``TaskQueueScheduler``)
+are used directly, batch-objective ones are wrapped by
+``BatchToAsyncAdapter``.
+
+Because the ledger (including in-flight trials) lives in the core,
+``checkpoint_path`` gives the async loop the same kill/resume guarantee as
+the sync tuner: pending trials are re-dispatched on resume and the
+remaining proposals replay exactly.  Returns ``TunerResults`` like
+``Tuner`` (dict-style access still works for legacy callers).
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
 
-import numpy as np
-
-from repro.core.spaces import ParamSpace
-from repro.core.strategies import FusedHallucinationStrategy
-from repro.scheduler.distributed import TaskQueueScheduler
+from repro.core.optimizer import AskTellOptimizer
+from repro.core.tuner import TunerResults
+from repro.scheduler.base import as_async
 
 
 class AsyncTuner:
     def __init__(self, param_space: Dict[str, Any],
                  trial_fn: Callable[[Dict[str, Any]], float],
-                 scheduler: TaskQueueScheduler,
-                 num_evals: int = 40, batch_size: int = 4,
+                 scheduler, num_evals: int = 40, batch_size: int = 4,
                  initial_random: int = 4, seed: int = 0,
                  mc_samples: Optional[int] = None,
-                 poll_interval: float = 0.01, refit_every: int = 8):
-        self.space = ParamSpace(param_space)
+                 poll_interval: float = 0.01, refit_every: int = 8,
+                 optimizer: str = "bayesian", fit_steps: int = 40,
+                 use_pallas: bool = False, pallas_interpret: bool = True,
+                 domain_size: Optional[float] = None,
+                 early_stopping: Optional[Callable[[TunerResults], bool]]
+                 = None,
+                 checkpoint_path: Optional[str] = None):
         self.trial_fn = trial_fn
-        self.sched = scheduler
+        # poll_interval only matters for submit-only schedulers without a
+        # completion condition; everything in-repo wakes on wait_any
+        self.sched = as_async(scheduler, poll=poll_interval)
         self.num_evals = num_evals
         self.batch_size = batch_size
         self.initial_random = initial_random
-        self.mc_samples = mc_samples
         self.poll = poll_interval
-        self.refit_every = refit_every
-        self._rng = np.random.default_rng(seed)
+        self.early_stopping = early_stopping
+        self.checkpoint_path = checkpoint_path
+        self.opt = AskTellOptimizer(
+            param_space, optimizer=optimizer, seed=seed,
+            domain_size=domain_size, mc_samples=mc_samples,
+            fit_steps=fit_steps, use_pallas=use_pallas,
+            pallas_interpret=pallas_interpret, refit_every=refit_every)
+        self.space = self.opt.space
+        if checkpoint_path and Path(checkpoint_path).exists():
+            self.load_state(checkpoint_path)
 
-    def maximize(self) -> Dict[str, Any]:
+    # ---------------------------------------------------------------- public
+    def maximize(self) -> TunerResults:
+        return self._run(sign=1.0)
+
+    def minimize(self) -> TunerResults:
+        return self._run(sign=-1.0)
+
+    def _done_count(self) -> int:
+        return self.opt.n_observed + self.opt.n_failed
+
+    def _run(self, sign: float) -> TunerResults:
+        self.opt.sign = sign
         t0 = time.time()
-        strat = FusedHallucinationStrategy(
-            self.space.dim, self.space.domain_size,
-            refit_every=self.refit_every)
-        X_obs: List[Dict] = []
-        y_obs: List[float] = []
-        pending = {}  # task -> params
-        dispatched = 0
-        failed = 0
+        opt = self.opt
+        inflight = {}   # TaskHandle -> trial id
 
-        def launch(params):
-            nonlocal dispatched
-            t = self.sched.submit(self.trial_fn, params)
-            pending[t] = params
-            dispatched += 1
+        def dispatch(trial):
+            handle = self.sched.submit(self.trial_fn, trial.params)
+            inflight[handle] = trial.id
 
-        for p in self.space.sample(
-                min(self.initial_random, self.num_evals), self._rng):
-            launch(p)
+        # resume: the ledger still holds trials that were in flight when the
+        # run died — re-dispatch them so the replay matches the
+        # uninterrupted schedule
+        for t in opt.pending_trials():
+            dispatch(t)
+        if opt.num_trials == 0:
+            n0 = min(max(self.initial_random, 1), self.num_evals)
+            for t in opt.ask(n0):
+                dispatch(t)
 
-        while y_obs.__len__() + failed < self.num_evals:
-            done = [t for t in pending if t.done.is_set()]
-            if not done:
-                time.sleep(self.poll)
-                continue
-            for t in done:
-                params = pending.pop(t)
-                if t.error is None and np.isfinite(t.result):
-                    X_obs.append(params)
-                    y_obs.append(float(t.result))
+        while self._done_count() < self.num_evals:
+            # keep the pipeline full: one replacement ask per free slot
+            while (opt.num_trials < self.num_evals
+                   and len(inflight) < self.batch_size):
+                for t in opt.ask(1):
+                    dispatch(t)
+            done = self.sched.wait_any(list(inflight))
+            for handle in done:
+                trial_id = inflight.pop(handle)
+                if handle.error is None:
+                    opt.tell(trial_id, handle.result)
                 else:
-                    failed += 1
-            while (dispatched < self.num_evals
-                   and len(pending) < self.batch_size):
-                if len(y_obs) < 2:
-                    launch(self.space.sample(1, self._rng)[0])
-                    continue
-                n_mc = self.mc_samples or self.space.mc_samples(
-                    self.batch_size)
-                cands = self.space.sample(n_mc, self._rng)
-                C = self.space.encode(cands)
-                # incremental absorb of completions (O(n^2) appends; full
-                # refit only every refit_every observations)
-                st = strat.gp.observe(self.space.encode(X_obs),
-                                      np.asarray(y_obs))
-                st = strat.gp.ensure_capacity(st, len(pending) + 1)
-                for pp in pending.values():  # hallucinate in-flight trials
-                    st = strat.gp.hallucinate(
-                        st, self.space.encode([pp])[0])
-                # fused device program; t = n_obs + n_pending reproduces the
-                # batch_index term of the adaptive-beta schedule
-                picks = strat.pick_from_state(st, C, 1)
-                launch(cands[picks[0]])
+                    opt.tell_failed(trial_id)
+                opt.snapshot_trace()
+            self._checkpoint()
+            es = self.early_stopping
+            if es and opt.n_observed and es(self._partial_results()):
+                break
+        return self._partial_results(wall=time.time() - t0)
 
-        best = int(np.argmax(y_obs)) if y_obs else -1
-        return {
-            "best_objective": y_obs[best] if y_obs else float("nan"),
-            "best_params": X_obs[best] if y_obs else {},
-            "objective_values": y_obs,
-            "params_tried": X_obs,
-            "n_failed": failed,
-            "wall_time_s": time.time() - t0,
-        }
+    def _partial_results(self, wall: float = 0.0) -> TunerResults:
+        return self.opt.results(iterations=self._done_count(), wall=wall)
+
+    # ------------------------------------------------------------ checkpoint
+    def _checkpoint(self):
+        if self.checkpoint_path:
+            self.opt.save(self.checkpoint_path,
+                          iteration=self._done_count())
+
+    def load_state(self, path):
+        self.opt.load(path)

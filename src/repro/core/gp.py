@@ -59,9 +59,13 @@ def _masked_kernel(X: jax.Array, mask: jax.Array, ls, var, noise):
 # Marginal-likelihood fit (jit, static buffer)
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.jit, static_argnames=("steps",))
-def fit_hypers(X: jax.Array, y: jax.Array, mask: jax.Array, steps: int = 40
-               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (lengthscales (d,), signal var, noise) by Adam on -log ML."""
+def fit_hypers(X: jax.Array, y: jax.Array, mask: jax.Array, steps: int = 40,
+               init: Optional[dict] = None,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, dict]:
+    """Returns (lengthscales (d,), signal var, noise, raw log-params) by Adam
+    on -log ML.  ``init`` warm-starts Adam from a previous fit's log-params
+    (fresh moments), so refit boundaries pay a short polish run instead of
+    re-converging from the default initialization."""
     d = X.shape[1]
     n_eff = jnp.maximum(mask.sum(), 1.0)
 
@@ -77,9 +81,12 @@ def fit_hypers(X: jax.Array, y: jax.Array, mask: jax.Array, steps: int = 40
               - 0.5 * n_eff * jnp.log(2 * jnp.pi))
         return -ll / n_eff
 
-    params = {"log_ls": jnp.zeros((d,)) + jnp.log(0.5),
-              "log_var": jnp.zeros(()),
-              "log_noise": jnp.log(jnp.asarray(1e-2))}
+    if init is None:
+        params = {"log_ls": jnp.zeros((d,)) + jnp.log(0.5),
+                  "log_var": jnp.zeros(()),
+                  "log_noise": jnp.log(jnp.asarray(1e-2))}
+    else:
+        params = {k: jnp.asarray(v, jnp.float32) for k, v in init.items()}
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
     lr, b1, b2 = 0.08, 0.9, 0.999
@@ -100,7 +107,7 @@ def fit_hypers(X: jax.Array, y: jax.Array, mask: jax.Array, steps: int = 40
     (params, _, _), _ = jax.lax.scan(step, (params, m, v),
                                      jnp.arange(steps))
     return (jnp.exp(params["log_ls"]), jnp.exp(params["log_var"]),
-            jnp.exp(params["log_noise"]) + 1e-5)
+            jnp.exp(params["log_noise"]) + 1e-5, params)
 
 
 # --------------------------------------------------------------------------- #
@@ -209,10 +216,9 @@ def adaptive_beta_dev(t: jax.Array, domain_size: jax.Array) -> jax.Array:
     return jnp.clip(beta, 1.0, 100.0)
 
 
-@functools.partial(jax.jit, static_argnames=("batch_size",))
-def fused_propose(X: jax.Array, y: jax.Array, mask: jax.Array, L: jax.Array,
-                  C: jax.Array, ls, var, noise, n_obs: jax.Array,
-                  domain_size: jax.Array, batch_size: int) -> jax.Array:
+def _fused_pick(X: jax.Array, y: jax.Array, mask: jax.Array, L: jax.Array,
+                C: jax.Array, ls, var, noise, n_obs: jax.Array,
+                domain_size: jax.Array, batch_size: int) -> jax.Array:
     """GP-BUCB batch selection as one device program (the tentpole hot path).
 
     One heavy posterior pass (O(n^2 S): cross-covariance + triangular solve)
@@ -273,6 +279,53 @@ def fused_propose(X: jax.Array, y: jax.Array, mask: jax.Array, L: jax.Array,
     _, _, _, _, _, _, mu, sig2, avail, picks = carry
     _, picks, _ = pick(jnp.int32(batch_size - 1), mu, sig2, avail, picks)
     return picks
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size",))
+def fused_propose(X: jax.Array, y: jax.Array, mask: jax.Array, L: jax.Array,
+                  C: jax.Array, ls, var, noise, n_obs: jax.Array,
+                  domain_size: jax.Array, batch_size: int) -> jax.Array:
+    """One jit'd device program for the whole GP-BUCB batch (no pending)."""
+    return _fused_pick(X, y, mask, L, C, ls, var, noise, n_obs,
+                       domain_size, batch_size)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "pend_cap"))
+def fused_propose_pending(X: jax.Array, y: jax.Array, mask: jax.Array,
+                          L: jax.Array, P: jax.Array, n_pending: jax.Array,
+                          C: jax.Array, ls, var, noise, n_obs: jax.Array,
+                          domain_size: jax.Array, batch_size: int,
+                          pend_cap: int) -> jax.Array:
+    """``fused_propose`` with in-flight trials hallucinated *inside* the
+    program (the async replacement-pick hot path).
+
+    A leading ``fori_loop`` over the (padded, ``pend_cap``) pending buffer
+    absorbs each in-flight configuration exactly the way the host-side
+    ``GaussianProcess.hallucinate`` does — posterior mean at the pending
+    point from the current extended system, rank-1 Cholesky append, phantom
+    y at the mean — then the standard pick loop runs with the observation
+    counter advanced by ``n_pending`` (reproducing the batch-index term of
+    the adaptive-beta schedule).  One device dispatch total, vs. the seed's
+    one O(n^2) program *per pending trial* per replacement pick.
+    """
+    def absorb(j, carry):
+        def do(c):
+            X, y, mask, L = c
+            x_new = P[j]
+            k_vec = matern52(X, x_new[None, :], ls, var)[:, 0] * mask
+            alpha = jax.scipy.linalg.cho_solve((L, True), y * mask)
+            mu = k_vec @ alpha
+            slot = (n_obs + j).astype(jnp.int32)
+            L2, X2, mask2 = chol_append(L, X, mask, slot, x_new,
+                                        ls, var, noise)
+            return X2, y.at[slot].set(mu), mask2, L2
+        return jax.lax.cond(j < n_pending, do, lambda c: c, carry)
+
+    carry = (X.astype(jnp.float32), y.astype(jnp.float32),
+             mask.astype(jnp.float32), L)
+    X, y, mask, L = jax.lax.fori_loop(0, pend_cap, absorb, carry)
+    return _fused_pick(X, y, mask, L, C, ls, var, noise,
+                       n_obs + n_pending, domain_size, batch_size)
 
 
 @functools.partial(jax.jit,
@@ -392,13 +445,19 @@ class GaussianProcess:
     """
 
     def __init__(self, dim: int, fit_steps: int = 40, refit_every: int = 8,
-                 track_kinv: bool = False):
+                 track_kinv: bool = False,
+                 warm_fit_steps: Optional[int] = None):
         self.dim = dim
         self.fit_steps = fit_steps
+        # refit boundaries warm-start Adam from the previous log-params and
+        # run a short polish instead of the full from-scratch schedule
+        self.warm_fit_steps = (max(8, fit_steps // 4)
+                               if warm_fit_steps is None else warm_fit_steps)
         self.refit_every = max(1, int(refit_every))
         self.track_kinv = track_kinv
         self.state: Optional[GPState] = None
         self.n_fit = 0                 # obs count at the last full fit
+        self._fit_params: Optional[dict] = None  # log-params of the last fit
         self._obs_X: Optional[np.ndarray] = None
         self._obs_y: Optional[np.ndarray] = None
 
@@ -415,8 +474,12 @@ class GaussianProcess:
         Xp[:n] = X
         yp[:n] = (y - y_mean) / y_std
         mp[:n] = 1.0
-        ls, var, noise = fit_hypers(jnp.asarray(Xp), jnp.asarray(yp),
-                                    jnp.asarray(mp), steps=self.fit_steps)
+        steps = self.fit_steps if self._fit_params is None \
+            else self.warm_fit_steps
+        ls, var, noise, params = fit_hypers(
+            jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mp), steps=steps,
+            init=self._fit_params)
+        self._fit_params = params
         L = cholesky_masked(jnp.asarray(Xp), jnp.asarray(mp), ls, var, noise)
         Kinv = kinv_from_chol(L) if self.track_kinv else None
         self.state = GPState(Xp, yp, mp, L, ls, var, noise, n, y_mean, y_std,
@@ -486,6 +549,56 @@ class GaussianProcess:
         y = np.asarray(y, dtype=np.float32)
         n_fit = max(1, min(int(n_fit), len(y)))
         st = self.fit(X[:n_fit], y[:n_fit])
+        for i in range(n_fit, len(y)):
+            st = self._append(st, X[i], y[i])
+        self.state = st
+        self._obs_X, self._obs_y = X, y
+        return st
+
+    # -------------------------------------------------- exact checkpointing
+    def export_state(self) -> Optional[dict]:
+        """JSON-able snapshot of the fit schedule: the last full fit's
+        observation count and raw log-hyperparameters.  Everything else
+        (buffers, Cholesky, standardization) is a pure function of the
+        observation history and this pair, so ``restore_exact`` rebuilds the
+        live state bit-for-bit without re-running Adam — which matters now
+        that fits warm-start from the previous fit in a chain a single
+        from-scratch ``restore`` cannot reproduce."""
+        if self.state is None or self._fit_params is None:
+            return None
+        return {"n_fit": int(self.n_fit),
+                "log_params": {k: np.asarray(v, np.float32).tolist()
+                               for k, v in self._fit_params.items()}}
+
+    def restore_exact(self, X: np.ndarray, y: np.ndarray,
+                      snap: dict) -> GPState:
+        """Rebuild the exact live state from an ``export_state`` snapshot:
+        padded buffers and Cholesky at ``n_fit`` under the stored
+        hyperparameters, then replay the remaining rows as O(n^2) appends —
+        identical ops to the uninterrupted incremental run."""
+        X = np.asarray(X, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float32)
+        n_fit = max(1, min(int(snap["n_fit"]), len(y)))
+        lp = {k: jnp.asarray(np.asarray(v, np.float32))
+              for k, v in snap["log_params"].items()}
+        self._fit_params = lp
+        n_pad = _pad_to(n_fit)
+        y_mean = float(y[:n_fit].mean())
+        y_std = float(y[:n_fit].std()) + 1e-6
+        Xp = np.zeros((n_pad, self.dim), np.float32)
+        yp = np.zeros((n_pad,), np.float32)
+        mp = np.zeros((n_pad,), np.float32)
+        Xp[:n_fit] = X[:n_fit]
+        yp[:n_fit] = (y[:n_fit] - y_mean) / y_std
+        mp[:n_fit] = 1.0
+        ls = jnp.exp(lp["log_ls"])
+        var = jnp.exp(lp["log_var"])
+        noise = jnp.exp(lp["log_noise"]) + 1e-5
+        L = cholesky_masked(jnp.asarray(Xp), jnp.asarray(mp), ls, var, noise)
+        Kinv = kinv_from_chol(L) if self.track_kinv else None
+        st = GPState(Xp, yp, mp, L, ls, var, noise, n_fit, y_mean, y_std,
+                     Kinv=Kinv)
+        self.n_fit = n_fit
         for i in range(n_fit, len(y)):
             st = self._append(st, X[i], y[i])
         self.state = st

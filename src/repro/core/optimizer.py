@@ -1,0 +1,328 @@
+"""Ask/tell optimizer core: the one engine behind every tuner and scheduler.
+
+Mango's headline contribution is a scheduler-agnostic optimizer (paper
+§2.2/§2.4); this module makes that literal.  ``AskTellOptimizer`` owns *all*
+optimizer state — the parameter space, the strategy/GP, the RNG, and a trial
+ledger with stable ids — behind four calls:
+
+    trials = opt.ask(n)          # propose n new configurations
+    opt.tell(trial.id, value)    # observe a completed trial
+    opt.tell_failed(trial.id)    # a crashed / dropped / non-finite trial
+    sd = opt.state_dict()        # full serializable snapshot (JSON-able)
+
+``Tuner`` is then nothing but the synchronous batch loop over this core and
+``AsyncTuner`` the completion-event loop; any execution model (serial,
+thread/process pools, the Celery-style task queue, or a user's own system)
+can drive the same optimizer (the design Tune and Orchestrate argue for).
+
+Pending trials are first-class in the ledger: ``ask`` hands the full
+in-flight set to the strategy, and the default fused GP-BUCB path
+hallucinates them *inside* its jit'd ``lax.fori_loop`` — one device program
+per ask, no matter how many trials are outstanding.
+
+Fault tolerance is the objective contract from the paper: trials that never
+come back are simply never told; ``tell_failed`` (or a non-finite ``tell``)
+records the loss without ever contaminating the GP.
+
+``state_dict()/load_state_dict()`` serialize the ledger, the RNG stream, and
+the GP's fit schedule (observation count + log-hyperparameters of the last
+full fit), so a run killed mid-flight — sync or async — resumes to the exact
+proposals of an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.spaces import ParamSpace
+from repro.core.strategies import STRATEGIES
+
+PENDING = "pending"
+OBSERVED = "observed"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Trial:
+    """One proposed configuration, tracked from ask to tell."""
+    id: int
+    params: Dict[str, Any]
+    status: str = PENDING
+    value: Optional[float] = None    # raw (un-signed) objective value
+    obs_seq: Optional[int] = None    # completion order (set at tell time)
+
+
+def _to_jsonable(cfg: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in cfg.items():
+        if isinstance(v, (np.integer,)):
+            out[k] = int(v)
+        elif isinstance(v, (np.floating,)):
+            out[k] = float(v)
+        elif isinstance(v, np.ndarray):
+            out[k] = v.tolist()
+        else:
+            out[k] = v
+    return out
+
+
+class AskTellOptimizer:
+    """Serializable ask/tell engine over the batch-selection strategies."""
+
+    def __init__(self, param_space, *, optimizer: str = "bayesian",
+                 seed: int = 0, sign: float = 1.0,
+                 domain_size: Optional[float] = None,
+                 mc_samples: Optional[int] = None, fit_steps: int = 40,
+                 use_pallas: bool = False, pallas_interpret: bool = True,
+                 refit_every: int = 8):
+        self.space = (param_space if isinstance(param_space, ParamSpace)
+                      else ParamSpace(param_space))
+        if optimizer not in STRATEGIES:
+            raise ValueError(f"unknown optimizer {optimizer!r}; "
+                             f"choose from {sorted(STRATEGIES)}")
+        self.optimizer = optimizer
+        self.mc_samples = mc_samples
+        self.fit_steps = fit_steps
+        self.use_pallas = use_pallas
+        self.pallas_interpret = pallas_interpret
+        self.refit_every = refit_every
+        self.domain_size = domain_size or self.space.domain_size
+        self.sign = sign                   # +1 maximize, -1 minimize
+        self._rng = np.random.default_rng(seed)
+        self._trials: Dict[int, Trial] = {}   # insertion order == ask order
+        self._next_id = 0
+        self._ask_count = 0
+        self._obs_count = 0
+        self._n_failed = 0
+        self._best_trace: List[float] = []    # raw best-so-far snapshots
+        self._strat = None
+        self._gp_snapshot = None   # pending restore from load_state_dict
+
+    # ------------------------------------------------------------- ledger
+    def trials(self) -> List[Trial]:
+        return list(self._trials.values())
+
+    def pending_trials(self) -> List[Trial]:
+        return [t for t in self._trials.values() if t.status == PENDING]
+
+    def observed_trials(self) -> List[Trial]:
+        """Observed trials in *completion* order.  Async completions land
+        out of ask order; keeping the GP history in tell order makes it
+        append-only, so ``GaussianProcess.observe``'s prefix check stays
+        satisfied and observations extend the Cholesky incrementally
+        instead of tripping a full refit on almost every ask."""
+        obs = [t for t in self._trials.values() if t.status == OBSERVED]
+        obs.sort(key=lambda t: t.obs_seq)
+        return obs
+
+    @property
+    def num_trials(self) -> int:
+        return len(self._trials)
+
+    @property
+    def n_observed(self) -> int:
+        return len(self.observed_trials())
+
+    @property
+    def n_failed(self) -> int:
+        return self._n_failed
+
+    # ----------------------------------------------------------- strategy
+    def _ensure_strategy(self):
+        if self._strat is None:
+            cls = STRATEGIES[self.optimizer]
+            self._strat = cls(self.space.dim, self.domain_size,
+                              fit_steps=self.fit_steps,
+                              use_pallas=self.use_pallas,
+                              pallas_interpret=self.pallas_interpret,
+                              refit_every=self.refit_every)
+            gp = getattr(self._strat, "gp", None)
+            if gp is not None and self._gp_snapshot is not None:
+                obs = self.observed_trials()
+                if obs:
+                    gp.restore_exact(
+                        self.space.encode([t.params for t in obs]),
+                        self._signed_y(obs), self._gp_snapshot)
+            self._gp_snapshot = None
+        return self._strat
+
+    def _signed_y(self, obs: List[Trial]) -> np.ndarray:
+        return np.asarray([self.sign * t.value for t in obs],
+                          dtype=np.float32)
+
+    # ---------------------------------------------------------------- ask
+    def ask(self, n: int = 1) -> List[Trial]:
+        """Propose ``n`` new trials; they enter the ledger as pending."""
+        if n < 1:
+            raise ValueError("ask(n) requires n >= 1")
+        strat = self._ensure_strategy()
+        obs = self.observed_trials()
+        seed = self._ask_count
+        if not strat.needs_gp:
+            n_mc = self.mc_samples or self.space.mc_samples(n)
+            cands = self.space.sample(n_mc, self._rng)
+            idx = strat.propose(None, [], self.space.encode(cands), n,
+                                seed=seed)
+            chosen = [cands[i] for i in idx]
+        elif len(obs) < 2:
+            # not enough observations to model: explore at random (the
+            # drivers' initial_random phase lands here too)
+            chosen = self.space.sample(n, self._rng)
+        else:
+            n_mc = self.mc_samples or self.space.mc_samples(n)
+            cands = self.space.sample(n_mc, self._rng)
+            C = self.space.encode(cands)
+            X = self.space.encode([t.params for t in obs])
+            y = self._signed_y(obs)
+            pend = self.pending_trials()
+            P = (self.space.encode([t.params for t in pend])
+                 if pend else None)
+            idx = strat.propose(X, y, C, n, seed=seed, pending=P)
+            chosen = [cands[i] for i in idx]
+        self._ask_count += 1
+        out = []
+        for p in chosen:
+            t = Trial(self._next_id, dict(p))
+            self._trials[t.id] = t
+            self._next_id += 1
+            out.append(t)
+        return out
+
+    # --------------------------------------------------------------- tell
+    def _get_pending(self, trial_id: int) -> Trial:
+        t = self._trials.get(trial_id)
+        if t is None:
+            raise KeyError(f"unknown trial id {trial_id!r} "
+                           "(tell before ask?)")
+        if t.status != PENDING:
+            raise ValueError(f"trial {trial_id} already {t.status}")
+        return t
+
+    def tell(self, trial_id: int, value: float) -> Trial:
+        """Observe a completed trial.  Non-finite values count as failures
+        (the paper's contract: they must never reach the surrogate)."""
+        t = self._get_pending(trial_id)
+        v = float(value)
+        if not np.isfinite(v):
+            t.status = FAILED
+            self._n_failed += 1
+            return t
+        t.status = OBSERVED
+        t.value = v
+        t.obs_seq = self._obs_count
+        self._obs_count += 1
+        return t
+
+    def tell_failed(self, trial_id: int) -> Trial:
+        """Record a crashed/dropped trial; it is never observed."""
+        t = self._get_pending(trial_id)
+        t.status = FAILED
+        self._n_failed += 1
+        return t
+
+    def observe_params(self, params: Dict[str, Any], value: float) -> Trial:
+        """Observe a configuration that never went through ``ask`` (an
+        objective returning params outside its batch — the legacy contract
+        lets it).  Enters the ledger directly as observed/failed."""
+        t = Trial(self._next_id, dict(params))
+        self._trials[t.id] = t
+        self._next_id += 1
+        v = float(value)
+        if np.isfinite(v):
+            t.status = OBSERVED
+            t.value = v
+            t.obs_seq = self._obs_count
+            self._obs_count += 1
+        else:
+            t.status = FAILED
+            self._n_failed += 1
+        return t
+
+    # ------------------------------------------------------------ results
+    def snapshot_trace(self) -> None:
+        """Append the current raw best to the best-so-far trace (drivers
+        call this at their iteration/completion boundaries)."""
+        obs = self.observed_trials()
+        if obs:
+            self._best_trace.append(
+                self.sign * max(self.sign * t.value for t in obs))
+
+    def results(self, iterations: Optional[int] = None, wall: float = 0.0):
+        from repro.core.tuner import TunerResults
+        obs = self.observed_trials()
+        if obs:
+            best = max(obs, key=lambda t: self.sign * t.value)
+            best_y, best_p = best.value, best.params
+        else:
+            best_y, best_p = float("nan"), {}
+        return TunerResults(
+            best_objective=best_y,
+            best_params=best_p,
+            params_tried=[t.params for t in obs],
+            objective_values=[t.value for t in obs],
+            best_trace=list(self._best_trace),
+            iterations=(self._ask_count if iterations is None
+                        else iterations),
+            n_failed=self._n_failed,
+            wall_time_s=wall,
+        )
+
+    # --------------------------------------------------------- state dict
+    def state_dict(self) -> Dict[str, Any]:
+        """Full JSON-able snapshot: ledger (pending trials included, so a
+        driver can re-dispatch them on resume), RNG stream, counters, and
+        the GP fit schedule."""
+        gp = getattr(self._strat, "gp", None) if self._strat else None
+        return {
+            "version": 1,
+            "next_id": self._next_id,
+            "ask_count": self._ask_count,
+            "n_failed": self._n_failed,
+            "sign": self.sign,
+            "best_trace": list(self._best_trace),
+            "trials": [{"id": t.id, "params": _to_jsonable(t.params),
+                        "status": t.status, "value": t.value,
+                        "obs_seq": t.obs_seq}
+                       for t in self._trials.values()],
+            "rng_state": self._rng.bit_generator.state,
+            "gp": gp.export_state() if gp is not None else None,
+        }
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        self._next_id = sd["next_id"]
+        self._ask_count = sd["ask_count"]
+        self._n_failed = sd["n_failed"]
+        self.sign = sd.get("sign", 1.0)
+        self._best_trace = list(sd.get("best_trace", []))
+        self._trials = {}
+        for rec in sd["trials"]:
+            self._trials[rec["id"]] = Trial(rec["id"], rec["params"],
+                                            rec["status"], rec["value"],
+                                            rec.get("obs_seq"))
+        self._obs_count = 1 + max(
+            (t.obs_seq for t in self._trials.values()
+             if t.obs_seq is not None), default=-1)
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = sd["rng_state"]
+        self._gp_snapshot = sd.get("gp")
+        self._strat = None   # rebuilt (with GP replay) on the next ask
+
+    # ------------------------------------------------------- file checkpoint
+    def save(self, path, iteration: int = 0) -> None:
+        """Atomically write ``{"iteration", "optimizer"}`` to ``path`` (the
+        one checkpoint format both drivers share)."""
+        p = Path(path)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"iteration": iteration,
+                                   "optimizer": self.state_dict()}))
+        tmp.replace(p)  # atomic swap: a crash never corrupts the checkpoint
+
+    def load(self, path) -> int:
+        """Load a ``save`` checkpoint; returns the stored iteration."""
+        state = json.loads(Path(path).read_text())
+        self.load_state_dict(state["optimizer"])
+        return state["iteration"]

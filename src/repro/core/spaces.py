@@ -65,6 +65,7 @@ class _Param:
             self.kind = "dist"
             self.dist = v
             self.dims = 1
+            self._ecdf_ref = None   # lazy, for sampling-only distributions
         elif isinstance(v, range):
             self.kind = "range"
             self.choices = np.array(list(v))
@@ -97,6 +98,22 @@ class _Param:
             return [self.choices[i] for i in idx]
         return [self.value] * n
 
+    def _ecdf(self) -> np.ndarray:
+        """Persistent empirical CDF for sampling-only distributions.
+
+        Fitted once from a dedicated fixed-seed draw (not the tuner's RNG
+        stream), so the same value encodes identically in every batch and
+        across checkpoint/resume — a per-batch min-max fallback would map
+        the same config to different GP inputs depending on its batchmates,
+        corrupting the surrogate.
+        """
+        if self._ecdf_ref is None:
+            draw = np.asarray(self.dist.rvs(
+                size=2048, random_state=np.random.default_rng(0xEC0F)),
+                dtype=float)
+            self._ecdf_ref = np.sort(draw.reshape(-1))
+        return self._ecdf_ref
+
     # ---- unit-cube encoding ------------------------------------------------
     def encode(self, values: Sequence[Any]) -> np.ndarray:
         n = len(values)
@@ -106,9 +123,9 @@ class _Param:
                 with np.errstate(all="ignore"):
                     enc = np.nan_to_num(
                         np.asarray(self.dist.cdf(v), dtype=float), nan=0.5)
-            else:  # sampling-only distribution: min-max over batch
-                lo, hi = v.min(), v.max()
-                enc = (v - lo) / (hi - lo + 1e-12)
+            else:  # sampling-only distribution: persistent empirical CDF
+                ref = self._ecdf()
+                enc = np.interp(v, ref, np.linspace(0.0, 1.0, len(ref)))
             return enc.reshape(n, 1)
         if self.kind == "range":
             lo, hi = self.choices[0], self.choices[-1]

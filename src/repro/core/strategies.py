@@ -24,13 +24,19 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import gp as gp_lib
 from repro.core.acquisition import adaptive_beta, ucb
-from repro.core.gp import (GaussianProcess, fused_propose,
-                           fused_propose_pallas)
+from repro.core.gp import GaussianProcess
 from repro.core.kmeans import kmeans_assign
 
 
 class BaseStrategy:
+    """A strategy consumes encoded observations + candidates and returns
+    pick indices.  ``propose`` additionally accepts ``pending`` — the
+    encoded configurations of trials currently in flight (the ask/tell
+    core's ledger) — which GP strategies hallucinate (GP-BUCB semantics:
+    variance contraction, no mean update) before picking."""
+
     needs_gp = True
 
     def __init__(self, dim: int, domain_size: float, fit_steps: int = 40,
@@ -50,15 +56,26 @@ class BaseStrategy:
                                       interpret=self.pallas_interpret)
         return self.gp.predict(C, st)
 
+    def _absorb_pending(self, st, pending):
+        """Host-loop fallback: hallucinate in-flight rows one by one."""
+        st = self.gp.ensure_capacity(st, len(pending))
+        for p in np.asarray(pending, dtype=np.float32):
+            st = self.gp.hallucinate(st, p)
+        return st
+
     def propose(self, X: np.ndarray, y: np.ndarray, candidates: np.ndarray,
-                batch_size: int, seed: int = 0) -> List[int]:
+                batch_size: int, seed: int = 0,
+                pending: Optional[np.ndarray] = None) -> List[int]:
         raise NotImplementedError
 
 
 class HallucinationStrategy(BaseStrategy):
-    def propose(self, X, y, candidates, batch_size, seed=0):
+    def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
         st = self.gp.fit(X, y)
-        n_evals = len(y)
+        n_pend = 0 if pending is None else len(pending)
+        if n_pend:
+            st = self._absorb_pending(st, pending)
+        n_evals = len(y) + n_pend
         picked: List[int] = []
         avail = np.ones(len(candidates), dtype=bool)
         for b in range(batch_size):
@@ -83,33 +100,56 @@ class FusedHallucinationStrategy(BaseStrategy):
     candidate indices to ``HallucinationStrategy`` on fixed seeds.
     """
 
-    def propose(self, X, y, candidates, batch_size, seed=0):
+    def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
+        n_pend = 0 if pending is None else len(pending)
         st = self.gp.observe(X, y)
-        st = self.gp.ensure_capacity(st, batch_size)
-        return self.pick_from_state(st, candidates, batch_size)
+        st = self.gp.ensure_capacity(st, batch_size + n_pend)
+        return self.pick_from_state(st, candidates, batch_size,
+                                    pending=pending)
 
-    def pick_from_state(self, st, candidates, batch_size):
-        """Window + dispatch the fused program against an explicit state
-        (``AsyncTuner`` passes one with pending trials hallucinated in)."""
-        # active window: a 64-multiple slice covering n + batch_size rows.
-        # The leading principal block of L is the Cholesky of the leading
-        # block of K, so slicing is exact — it just avoids paying the
-        # power-of-two padded size (up to 2n) in the O(n^2 S) posterior.
+    def pick_from_state(self, st, candidates, batch_size, pending=None):
+        """Window + dispatch the fused program against an explicit state.
+
+        ``pending`` (encoded in-flight rows) rides along into the device
+        program: ``fused_propose_pending`` hallucinates them inside the
+        jit'd fori_loop, so an async replacement pick is still exactly one
+        GP program dispatch.  (The Pallas scorer path pre-absorbs them with
+        the host loop — its K^{-1} Schur appends are not yet fused.)
+        """
+        n_pend = 0 if pending is None else len(pending)
+        if self.use_pallas and n_pend:
+            st = self._absorb_pending(st, pending)
+            n_pend, pending = 0, None
+        # active window: a 64-multiple slice covering n + pending +
+        # batch_size rows.  The leading principal block of L is the Cholesky
+        # of the leading block of K, so slicing is exact — it just avoids
+        # paying the power-of-two padded size (up to 2n) in the O(n^2 S)
+        # posterior.
         n_pad = st.X.shape[0]
-        na = min(n_pad, max(16, -(-(st.n + batch_size) // 64) * 64))
+        na = min(n_pad, max(16,
+                            -(-(st.n + n_pend + batch_size) // 64) * 64))
         C = jnp.asarray(np.ascontiguousarray(candidates, dtype=np.float32))
         args = (jnp.asarray(st.X[:na]), jnp.asarray(st.y[:na]),
                 jnp.asarray(st.mask[:na]))
         tail = (C, st.ls, st.var, st.noise, jnp.int32(st.n),
                 jnp.float32(self.domain_size))
         if self.use_pallas:
-            picks = fused_propose_pallas(*args, st.L[:na, :na],
-                                         st.Kinv[:na, :na], *tail,
-                                         batch_size=batch_size,
-                                         interpret=self.pallas_interpret)
+            picks = gp_lib.fused_propose_pallas(
+                *args, st.L[:na, :na], st.Kinv[:na, :na], *tail,
+                batch_size=batch_size, interpret=self.pallas_interpret)
+        elif n_pend:
+            # pad the pending buffer to a small static cap so the jit cache
+            # sees a handful of shapes, not one per in-flight count
+            cap = -(-n_pend // 4) * 4
+            P = np.zeros((cap, st.X.shape[1]), np.float32)
+            P[:n_pend] = np.asarray(pending, dtype=np.float32)
+            picks = gp_lib.fused_propose_pending(
+                args[0], args[1], args[2], st.L[:na, :na],
+                jnp.asarray(P), jnp.int32(n_pend), *tail,
+                batch_size=batch_size, pend_cap=cap)
         else:
-            picks = fused_propose(*args, st.L[:na, :na], *tail,
-                                  batch_size=batch_size)
+            picks = gp_lib.fused_propose(*args, st.L[:na, :na], *tail,
+                                         batch_size=batch_size)
         return [int(i) for i in np.asarray(picks)]
 
 
@@ -118,10 +158,13 @@ class ClusteringStrategy(BaseStrategy):
         super().__init__(*args, **kwargs)
         self.top_frac = top_frac
 
-    def propose(self, X, y, candidates, batch_size, seed=0):
+    def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
         st = self.gp.observe(X, y)
+        n_pend = 0 if pending is None else len(pending)
+        if n_pend:
+            st = self._absorb_pending(st, pending)
         mu, sd = self._predict(st, candidates)
-        beta = adaptive_beta(len(y), self.domain_size)
+        beta = adaptive_beta(len(y) + n_pend, self.domain_size)
         acq = ucb(mu, sd, beta)
         if batch_size == 1:
             return [int(np.argmax(acq))]
@@ -160,7 +203,7 @@ class RandomStrategy(BaseStrategy):
     def __init__(self, dim: int = 0, domain_size: float = 1.0, **kwargs):
         pass
 
-    def propose(self, X, y, candidates, batch_size, seed=0):
+    def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
         rng = np.random.default_rng(seed)
         return list(rng.choice(len(candidates), size=batch_size,
                                replace=False))

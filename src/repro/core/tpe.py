@@ -45,7 +45,10 @@ class TPEStrategy(BaseStrategy):
         dens = k.mean(axis=1) + 1e-12    # (m, d)
         return np.log(dens).sum(axis=1)
 
-    def propose(self, X, y, candidates, batch_size, seed=0) -> List[int]:
+    def propose(self, X, y, candidates, batch_size, seed=0,
+                pending=None) -> List[int]:
+        # TPE has no variance machinery to contract; pending trials are
+        # ignored (Hyperopt's naive parallelism, as documented above)
         y = np.asarray(y, dtype=float)
         n = len(y)
         n_good = max(1, int(np.ceil(self.gamma * n)))

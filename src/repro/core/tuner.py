@@ -1,39 +1,43 @@
-"""Tuner: Mango's user-facing orchestration (paper Fig. 1 workflow).
+"""Tuner: the synchronous batch driver over ``AskTellOptimizer``.
+
+All optimizer state (space, strategy/GP, RNG, trial ledger, checkpoint
+schedule) lives in the ask/tell core (``repro.core.optimizer``); this class
+only runs the paper's Fig. 1 workflow: ask a batch, dispatch it through the
+objective, tell back whatever subset returns, repeat.
 
 The objective-function contract is the paper's fault-tolerance mechanism
 (§2.2/§2.4): the tuner passes a *list* of configurations; the objective
 returns ``(evals, params)`` — any subset, in any order.  Missing entries
-(failed workers, stragglers past the scheduler deadline) are simply never
-observed.  The tuner keeps going as long as at least one result ever returns.
+(failed workers, stragglers past the scheduler deadline) are told as failed
+and never reach the surrogate.
 
 Config keys (mirroring Mango's ``conf_dict``):
   batch_size (1), num_iteration (20), initial_random (2),
-  optimizer ("bayesian" | "clustering" | "random"),
+  optimizer ("bayesian" | "clustering" | "random" | "tpe"),
   domain_size (None -> heuristic), mc_samples (None -> heuristic),
   seed (0), early_stopping (callable(results) -> bool),
   checkpoint_path (None), fit_steps (40), use_pallas (False),
   pallas_interpret (True; set False on real TPU for the compiled kernel),
   refit_every (8; full GP hyperparameter re-tune every N new observations —
-  in between, observations extend the Cholesky incrementally in O(n^2)).
+  in between, observations extend the Cholesky incrementally in O(n^2)),
+  scheduler (None; any ``repro.scheduler`` Scheduler — then ``objective``
+  is a *per-trial* callable and the scheduler wraps it into the batch
+  objective, so ``Tuner`` and ``AsyncTuner`` take the same inputs).
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
-from repro.core.spaces import ParamSpace
-from repro.core.strategies import STRATEGIES
+from repro.core.optimizer import AskTellOptimizer, Trial
 
 DEFAULTS = dict(batch_size=1, num_iteration=20, initial_random=2,
                 optimizer="bayesian", domain_size=None, mc_samples=None,
                 seed=0, early_stopping=None, checkpoint_path=None,
                 fit_steps=40, use_pallas=False, pallas_interpret=True,
-                refit_every=8)
+                refit_every=8, scheduler=None)
 
 
 @dataclasses.dataclass
@@ -50,99 +54,82 @@ class TunerResults:
     def as_dict(self):
         return dataclasses.asdict(self)
 
-
-def _to_jsonable(cfg: Dict[str, Any]) -> Dict[str, Any]:
-    out = {}
-    for k, v in cfg.items():
-        if isinstance(v, (np.integer,)):
-            out[k] = int(v)
-        elif isinstance(v, (np.floating,)):
-            out[k] = float(v)
-        elif isinstance(v, np.ndarray):
-            out[k] = v.tolist()
-        else:
-            out[k] = v
-    return out
+    def __getitem__(self, key):      # legacy dict-style access
+        return getattr(self, key)
 
 
 class Tuner:
     def __init__(self, param_space: Dict[str, Any],
-                 objective: Callable[[List[Dict]], Any],
+                 objective: Callable[..., Any],
                  config: Optional[Dict[str, Any]] = None):
-        self.space = ParamSpace(param_space)
-        self.objective = objective
         self.conf = {**DEFAULTS, **(config or {})}
         unknown = set(self.conf) - set(DEFAULTS)
         if unknown:
             raise ValueError(f"unknown Tuner config keys: {sorted(unknown)}")
-        opt = self.conf["optimizer"]
-        if opt not in STRATEGIES:
-            raise ValueError(f"unknown optimizer {opt!r}; "
-                             f"choose from {sorted(STRATEGIES)}")
-        self._rng = np.random.default_rng(self.conf["seed"])
-        self._X: List[Dict[str, Any]] = []   # observed configs
-        self._y: List[float] = []            # observed objective values
-        self._best_trace: List[float] = []
+        sched = self.conf["scheduler"]
+        if sched is not None:
+            # unified signature: objective is a per-trial fn, the scheduler
+            # wraps it into the paper's batch objective
+            objective = sched.make_objective(objective)
+        self.objective = objective
+        self.opt = AskTellOptimizer(
+            param_space, optimizer=self.conf["optimizer"],
+            seed=self.conf["seed"], domain_size=self.conf["domain_size"],
+            mc_samples=self.conf["mc_samples"],
+            fit_steps=self.conf["fit_steps"],
+            use_pallas=self.conf["use_pallas"],
+            pallas_interpret=self.conf["pallas_interpret"],
+            refit_every=self.conf["refit_every"])
+        self.space = self.opt.space
         self._iteration = 0
-        self._n_failed = 0
-        self._sign = 1.0
-        self._strat = None
-        self._gp_n_fit = 0   # obs count at the GP's last full fit (resume)
         ckpt = self.conf["checkpoint_path"]
         if ckpt and Path(ckpt).exists():
             self.load_state(ckpt)
 
     # ------------------------------------------------------------- plumbing
-    def _evaluate(self, batch: List[Dict]) -> None:
-        """Dispatch a batch and observe whatever subset comes back."""
-        out = self.objective(list(batch))
+    def _run_batch(self, trials: List[Trial]) -> None:
+        """Dispatch a batch and tell back whatever subset comes back."""
+        out = self.objective([t.params for t in trials])
         if out is None:
             evals, params = [], []
         elif isinstance(out, tuple) and len(out) == 2:
             evals, params = out
         else:  # plain list of values, aligned with the batch
-            evals, params = list(out), list(batch)
+            evals, params = list(out), [t.params for t in trials]
         if len(evals) != len(params):
             raise ValueError(
                 "objective must return (evals, params) of equal length")
-        self._n_failed += len(batch) - len(evals)
+        remaining = list(trials)
         for v, p in zip(evals, params):
-            v = float(v)
-            if not np.isfinite(v):
-                self._n_failed += 1
+            t = self._match(remaining, p)
+            if t is None and remaining:
+                # legacy contract: objectives may return *transformed*
+                # configs (derived keys, rounding).  The returned params are
+                # authoritative; pair with a pending slot so the failure
+                # count stays len(batch) - len(evals), not len(batch)
+                t = remaining.pop(0)
+            if t is not None:
+                t.params = dict(p)
+                self.opt.tell(t.id, v)
+            else:   # more results than the batch had slots
+                self.opt.observe_params(p, v)
+        for t in remaining:   # never came back -> failed (paper contract)
+            self.opt.tell_failed(t.id)
+
+    @staticmethod
+    def _match(remaining: List[Trial], params) -> Optional[Trial]:
+        """Pair a returned config with its pending trial: objectives may
+        reorder or copy, so match by identity first, then equality."""
+        for i, t in enumerate(remaining):
+            if t.params is params:
+                return remaining.pop(i)
+        for i, t in enumerate(remaining):
+            try:
+                if t.params == params:
+                    return remaining.pop(i)
+            except ValueError:     # array-valued params: skip equality
                 continue
-            self._X.append(dict(p))
-            self._y.append(self._sign * v)
-
-    def _strategy(self):
-        cls = STRATEGIES[self.conf["optimizer"]]
-        domain = self.conf["domain_size"] or self.space.domain_size
-        strat = cls(self.space.dim, domain, fit_steps=self.conf["fit_steps"],
-                    use_pallas=self.conf["use_pallas"],
-                    pallas_interpret=self.conf["pallas_interpret"],
-                    refit_every=self.conf["refit_every"])
-        if self._gp_n_fit and self._y and strat.needs_gp:
-            # replay the checkpointed fit/append schedule so resumed runs
-            # produce the same remaining proposals as uninterrupted ones
-            strat.gp.restore(self.space.encode(self._X),
-                             np.asarray(self._y, np.float32),
-                             self._gp_n_fit)
-        return strat
-
-    def _propose(self, strategy, batch_size: int) -> List[Dict]:
-        n_mc = self.conf["mc_samples"] or self.space.mc_samples(batch_size)
-        candidates = self.space.sample(n_mc, self._rng)
-        if not self._y or not strategy.needs_gp:
-            idx = strategy.propose(None, [], self.space.encode(candidates),
-                                   batch_size, seed=self._iteration) \
-                if not strategy.needs_gp else \
-                list(self._rng.choice(n_mc, size=batch_size, replace=False))
-            return [candidates[i] for i in idx]
-        C = self.space.encode(candidates)
-        X = self.space.encode(self._X)
-        idx = strategy.propose(X, np.asarray(self._y), C, batch_size,
-                               seed=self._iteration)
-        return [candidates[i] for i in idx]
+        return None
 
     # ---------------------------------------------------------------- public
     def maximize(self) -> TunerResults:
@@ -155,76 +142,33 @@ class Tuner:
     run = maximize
 
     def _run(self, sign: float) -> TunerResults:
-        self._sign = sign
+        self.opt.sign = sign
         t0 = time.time()
         bs = self.conf["batch_size"]
-        strategy = self._strat = self._strategy()
 
-        if self._iteration == 0 and not self._y:
+        if self.opt.num_trials == 0:
             n0 = max(self.conf["initial_random"], 1)
-            init = self.space.sample(n0, self._rng)
-            self._evaluate(init)
+            self._run_batch(self.opt.ask(n0))
             self._checkpoint()
 
         while self._iteration < self.conf["num_iteration"]:
-            batch = self._propose(strategy, bs)
-            self._evaluate(batch)
+            self._run_batch(self.opt.ask(bs))
             self._iteration += 1
-            if self._y:
-                self._best_trace.append(float(np.max(self._y)))
+            self.opt.snapshot_trace()
             self._checkpoint()
             es = self.conf["early_stopping"]
-            if es and self._y and es(self._partial_results()):
+            if es and self.opt.n_observed and es(self._partial_results()):
                 break
         return self._partial_results(wall=time.time() - t0)
 
     def _partial_results(self, wall: float = 0.0) -> TunerResults:
-        if self._y:
-            i = int(np.argmax(self._y))
-            best_y = self._sign * self._y[i]
-            best_p = self._X[i]
-        else:
-            best_y, best_p = float("nan"), {}
-        return TunerResults(
-            best_objective=best_y,
-            best_params=best_p,
-            params_tried=list(self._X),
-            objective_values=[self._sign * v for v in self._y],
-            best_trace=[self._sign * v for v in self._best_trace],
-            iterations=self._iteration,
-            n_failed=self._n_failed,
-            wall_time_s=wall,
-        )
+        return self.opt.results(iterations=self._iteration, wall=wall)
 
     # ------------------------------------------------------------ checkpoint
     def _checkpoint(self):
         path = self.conf["checkpoint_path"]
-        if not path:
-            return
-        gp = getattr(self._strat, "gp", None)
-        state = {
-            "iteration": self._iteration,
-            "X": [_to_jsonable(x) for x in self._X],
-            "y": self._y,
-            "best_trace": self._best_trace,
-            "n_failed": self._n_failed,
-            "sign": self._sign,
-            "rng_state": self._rng.bit_generator.state,
-            "gp_n_fit": gp.n_fit if gp is not None else 0,
-        }
-        p = Path(path)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(state))
-        tmp.replace(p)  # atomic swap: a crash never corrupts the checkpoint
+        if path:
+            self.opt.save(path, iteration=self._iteration)
 
     def load_state(self, path):
-        state = json.loads(Path(path).read_text())
-        self._iteration = state["iteration"]
-        self._X = state["X"]
-        self._y = state["y"]
-        self._best_trace = state["best_trace"]
-        self._n_failed = state["n_failed"]
-        self._sign = state.get("sign", 1.0)
-        self._gp_n_fit = state.get("gp_n_fit", 0)
-        self._rng = np.random.default_rng()
-        self._rng.bit_generator.state = state["rng_state"]
+        self._iteration = self.opt.load(path)

@@ -1,7 +1,10 @@
-from repro.scheduler.base import Scheduler
+from repro.scheduler.base import (AsyncScheduler, BatchToAsyncAdapter,
+                                  Scheduler, TaskHandle, as_async)
 from repro.scheduler.distributed import FaultInjection, TaskQueueScheduler
 from repro.scheduler.local import (ProcessScheduler, SerialScheduler,
                                    ThreadScheduler)
 
-__all__ = ["Scheduler", "FaultInjection", "TaskQueueScheduler",
-           "ProcessScheduler", "SerialScheduler", "ThreadScheduler"]
+__all__ = ["Scheduler", "AsyncScheduler", "TaskHandle",
+           "BatchToAsyncAdapter", "as_async", "FaultInjection",
+           "TaskQueueScheduler", "ProcessScheduler", "SerialScheduler",
+           "ThreadScheduler"]

@@ -1,19 +1,32 @@
 """Scheduler abstraction (paper §2.4).
 
 Mango's key design decision: the optimizer never talks to a scheduling
-framework — it calls a user *objective function* that takes a batch of
-configurations and returns partial ``(evals, params)``.  A ``Scheduler``
-here is a factory that wraps a per-trial callable into such an objective,
-implementing whatever execution/fault semantics the deployment needs.
+framework.  Two execution protocols drive the same ask/tell core:
+
+  * **Batch** (``Scheduler``): a factory that wraps a per-trial callable
+    into the paper's batch objective — takes a list of configurations,
+    returns partial ``(evals, params)``.  The synchronous ``Tuner`` loop
+    uses this directly.
+  * **Async** (``AsyncScheduler``): ``submit(fn, params) -> TaskHandle``
+    plus ``wait_any(handles)`` — a completion-event interface the
+    ``AsyncTuner`` event loop blocks on.  Implementations signal a
+    ``threading.Condition`` when a trial finishes, so the event loop wakes
+    exactly then (no polling).
+
+``BatchToAsyncAdapter`` bridges the two: any batch-objective scheduler
+(serial, thread pool, process pool, task queue) becomes submittable one
+trial at a time, keeping its own fault semantics (a dropped trial surfaces
+as a failed handle).  ``as_async`` picks the right view automatically, so
+both tuners accept *any* scheduler.
 
 The ``TaskQueueScheduler`` in ``distributed.py`` reproduces the Celery-on-
-Kubernetes production setup from the paper (Listing 4): tasks enqueued to a
-worker pool, per-batch deadline, stragglers/failed workers dropped from the
-returned lists, optional retries.
+Kubernetes production setup from the paper (Listing 4) and implements both
+protocols natively.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Protocol, Tuple
+import threading
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 TrialFn = Callable[[Dict[str, Any]], float]
 Objective = Callable[[List[Dict[str, Any]]],
@@ -24,3 +37,132 @@ class Scheduler(Protocol):
     def make_objective(self, trial_fn: TrialFn) -> Objective:
         """Wrap a single-config callable into Mango's batch objective."""
         ...
+
+
+class TaskHandle:
+    """A single in-flight trial: result/error land here, ``done`` is set
+    last (and the owning scheduler's condition is notified)."""
+
+    __slots__ = ("params", "result", "error", "done")
+
+    def __init__(self, params: Dict[str, Any]):
+        self.params = params
+        self.result: Optional[float] = None
+        self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+
+
+class AsyncScheduler(Protocol):
+    def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
+        """Dispatch one trial; returns immediately with its handle."""
+        ...
+
+    def wait_any(self, handles: List[TaskHandle],
+                 timeout: Optional[float] = None) -> List[TaskHandle]:
+        """Block until at least one handle completes (or timeout); return
+        the completed subset."""
+        ...
+
+
+class BatchSchedulerBase:
+    """Mixin for batch-objective schedulers: ``as_async()`` returns the
+    submit-style view of this scheduler."""
+
+    def make_objective(self, trial_fn: TrialFn) -> Objective:
+        raise NotImplementedError
+
+    def as_async(self) -> "BatchToAsyncAdapter":
+        return BatchToAsyncAdapter(self)
+
+
+class BatchToAsyncAdapter:
+    """Drive a batch-objective ``Scheduler`` one trial at a time.
+
+    Each ``submit`` runs a single-element batch through the wrapped
+    scheduler's objective on its own daemon thread (the driver caps
+    in-flight trials, so thread count stays bounded; daemon threads mean an
+    abandoned straggler can never block interpreter exit), preserving the
+    scheduler's fault/deadline semantics: an empty partial result means the
+    trial was dropped and surfaces as a failed handle.  Completion signals
+    the shared condition variable, so ``wait_any`` wakes exactly when a
+    trial lands.
+    """
+
+    def __init__(self, scheduler: Scheduler):
+        self.scheduler = scheduler
+        self._cv = threading.Condition()
+        self._objectives: Dict[int, Objective] = {}   # id(fn) -> objective
+
+    def _objective_for(self, fn: TrialFn) -> Objective:
+        key = id(fn)
+        if key not in self._objectives:
+            self._objectives[key] = self.scheduler.make_objective(fn)
+        return self._objectives[key]
+
+    def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
+        handle = TaskHandle(params)
+        objective = self._objective_for(fn)
+
+        def run():
+            try:
+                evals, _ = objective([params])
+                if evals:
+                    handle.result = float(evals[0])
+                else:
+                    handle.error = RuntimeError(
+                        "trial dropped by scheduler (fault/deadline)")
+            except Exception as e:  # noqa: BLE001
+                handle.error = e
+            with self._cv:
+                handle.done.set()
+                self._cv.notify_all()
+
+        threading.Thread(target=run, daemon=True,
+                         name="mango-async-adapter").start()
+        return handle
+
+    def wait_any(self, handles: List[TaskHandle],
+                 timeout: Optional[float] = None) -> List[TaskHandle]:
+        if not handles:
+            return []
+        with self._cv:
+            self._cv.wait_for(
+                lambda: any(h.done.is_set() for h in handles), timeout)
+            return [h for h in handles if h.done.is_set()]
+
+
+class _PollingWaitShim:
+    """Wrap a scheduler that has ``submit`` but no ``wait_any`` (third-party
+    implementations): fall back to polling the done events."""
+
+    def __init__(self, scheduler, poll: float = 0.01):
+        self._sched = scheduler
+        self._poll = poll
+
+    def submit(self, fn, params):
+        return self._sched.submit(fn, params)
+
+    def wait_any(self, handles, timeout=None):
+        if not handles:
+            return []
+        import time
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            done = [h for h in handles if h.done.is_set()]
+            if done or (deadline is not None and time.time() >= deadline):
+                return done
+            time.sleep(self._poll)
+
+
+def as_async(scheduler, poll: float = 0.01) -> AsyncScheduler:
+    """Return the async (submit/wait_any) view of any scheduler.  ``poll``
+    only applies to the shim around submit-only schedulers; everything else
+    wakes on a completion condition."""
+    if hasattr(scheduler, "submit"):
+        if hasattr(scheduler, "wait_any"):
+            return scheduler
+        return _PollingWaitShim(scheduler, poll=poll)
+    if hasattr(scheduler, "make_objective"):
+        return BatchToAsyncAdapter(scheduler)
+    raise TypeError(f"{scheduler!r} implements neither the batch nor the "
+                    "async scheduler protocol")

@@ -22,7 +22,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.scheduler.base import Objective, TrialFn
+from repro.scheduler.base import Objective, TaskHandle, TrialFn
 
 
 @dataclasses.dataclass
@@ -33,19 +33,22 @@ class FaultInjection:
     seed: int = 0
 
 
-class _Task:
-    __slots__ = ("params", "result", "error", "done", "retries")
+class _Task(TaskHandle):
+    __slots__ = ("retries",)
 
     def __init__(self, params):
-        self.params = params
-        self.result = None
-        self.error = None
-        self.done = threading.Event()
+        super().__init__(params)
         self.retries = 0
 
 
 class TaskQueueScheduler:
-    """Celery-like distributed task queue with a local worker pool."""
+    """Celery-like distributed task queue with a local worker pool.
+
+    Implements both scheduler protocols natively: the batch objective
+    (``make_objective``) and the async submit/wait_any interface — task
+    completion signals ``_done_cv``, so ``AsyncTuner`` wakes exactly when a
+    trial finishes instead of polling.
+    """
 
     def __init__(self, n_workers: int = 4, timeout: Optional[float] = None,
                  max_retries: int = 0,
@@ -59,6 +62,7 @@ class TaskQueueScheduler:
         self._workers: List[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
+        self._done_cv = threading.Condition()
         self._started = False
         self.stats = {"completed": 0, "failed": 0, "retried": 0,
                       "straggled": 0}
@@ -97,7 +101,7 @@ class TaskQueueScheduler:
                     raise RuntimeError("injected worker failure")
                 task.result = float(fn(task.params))
                 self.stats["completed"] += 1
-                task.done.set()
+                self._finish(task)
             except Exception as e:  # noqa: BLE001
                 if task.retries < self.max_retries:
                     task.retries += 1
@@ -106,7 +110,14 @@ class TaskQueueScheduler:
                 else:
                     task.error = e
                     self.stats["failed"] += 1
-                    task.done.set()
+                    self._finish(task)
+
+    def _finish(self, task: _Task) -> None:
+        # notify under the condition lock: wait_any's predicate check and
+        # wait are serialized against this, so completions are never missed
+        with self._done_cv:
+            task.done.set()
+            self._done_cv.notify_all()
 
     # ------------------------------------------------------------- async API
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> _Task:
@@ -114,6 +125,17 @@ class TaskQueueScheduler:
         task = _Task(params)
         self._q.put((task, fn))
         return task
+
+    def wait_any(self, handles: List[TaskHandle],
+                 timeout: Optional[float] = None) -> List[TaskHandle]:
+        """Block until at least one submitted task completes; wakes on the
+        completion condition, not a poll loop."""
+        if not handles:
+            return []
+        with self._done_cv:
+            self._done_cv.wait_for(
+                lambda: any(h.done.is_set() for h in handles), timeout)
+            return [h for h in handles if h.done.is_set()]
 
     def gather(self, tasks: List[_Task], timeout: Optional[float] = None
                ) -> Tuple[List[float], List[Dict[str, Any]]]:

@@ -1,13 +1,18 @@
-"""Local schedulers: serial (paper Listing 3), thread pool, process pool."""
+"""Local schedulers: serial (paper Listing 3), thread pool, process pool.
+
+All three implement the batch-objective protocol; ``.as_async()`` (from
+``BatchSchedulerBase``) returns the submit/wait_any view so they can also
+drive ``AsyncTuner``'s completion-event loop.
+"""
 from __future__ import annotations
 
 import concurrent.futures as cf
 from typing import Any, Dict, List, Optional
 
-from repro.scheduler.base import Objective, TrialFn
+from repro.scheduler.base import BatchSchedulerBase, Objective, TrialFn
 
 
-class SerialScheduler:
+class SerialScheduler(BatchSchedulerBase):
     """Sequential evaluation; failed trials are dropped (partial results)."""
 
     def make_objective(self, trial_fn: TrialFn) -> Objective:
@@ -24,7 +29,7 @@ class SerialScheduler:
         return objective
 
 
-class ThreadScheduler:
+class ThreadScheduler(BatchSchedulerBase):
     """Thread-pool evaluation with a per-batch deadline.
 
     Results that miss the deadline (stragglers) are NOT waited for — the
@@ -57,7 +62,7 @@ class ThreadScheduler:
         return objective
 
 
-class ProcessScheduler:
+class ProcessScheduler(BatchSchedulerBase):
     """Process-pool evaluation (trial_fn must be picklable)."""
 
     def __init__(self, n_workers: int = 2, timeout: Optional[float] = None):

@@ -103,3 +103,32 @@ def test_loguniform_cdf_ppf_roundtrip():
     lu = loguniform(-4, 3)
     q = np.linspace(0.01, 0.99, 17)
     np.testing.assert_allclose(lu.cdf(lu.ppf(q)), q, atol=1e-9)
+
+
+class _SamplingOnly:
+    """A distribution exposing only the paper's minimal contract (.rvs)."""
+
+    def rvs(self, size=None, random_state=None):
+        rng = (random_state if isinstance(random_state, np.random.Generator)
+               else np.random.default_rng(random_state))
+        return rng.gamma(2.0, 1.5, size)
+
+
+def test_sampling_only_distribution_batch_stable_encoding():
+    """No-.cdf distributions must encode a value identically regardless of
+    its batchmates: the persistent empirical CDF replaces the old per-batch
+    min-max (which changed the GP input for the same config every batch)."""
+    space = ParamSpace({"g": _SamplingOnly()})
+    rng = np.random.default_rng(0)
+    s = space.sample(32, rng)
+    enc_alone = np.array([space.encode([c])[0, 0] for c in s])
+    enc_batch = space.encode(s)[:, 0]
+    np.testing.assert_array_equal(enc_alone, enc_batch)  # batch-invariant
+    # stable across a fresh ParamSpace too (checkpoint/resume encodes the
+    # same history to the same GP inputs)
+    space2 = ParamSpace({"g": _SamplingOnly()})
+    np.testing.assert_array_equal(space2.encode(s)[:, 0], enc_batch)
+    assert (enc_batch >= 0).all() and (enc_batch <= 1).all()
+    # monotone in the underlying value
+    order = np.argsort([c["g"] for c in s])
+    assert (np.diff(enc_batch[order]) >= 0).all()
