@@ -24,16 +24,39 @@ previous fit's log-params (ISSUE 2 — the warm path runs a short Adam polish,
 ``warm_fit_steps``, instead of the full ``fit_steps`` schedule); the
 amortized number uses the warm cost, since that is what a steady-state
 tuner loop pays.
+
+ISSUE-3 sections (the finished on-device proposal stack):
+
+  * ``pallas_pending_{host,fused}``: async replacement pick on the Pallas
+    scorer with in-flight trials — host absorb loop (one device program per
+    pending trial) vs the single fused program whose absorb phase tracks
+    K^{-1} via in-program Schur appends.
+  * ``pallas_rescore_{full,downdate}``: the per-slot rescore op across
+    training-set size n — full scoring kernel (O(n^2 S)) vs the in-kernel
+    rank-1 variance downdate (O(n S)); the growth across n rows is the
+    point.
+  * ``clustering_{host,fused}``: clustering batch proposal, host pipeline
+    (acquisition surface + top-slice + k-means on host) vs the one-program
+    device pipeline (wash on CPU; on accelerators it removes the (n_mc,)
+    device->host transfer per ask).
+
+``--json PATH`` additionally writes every emitted row as JSON so CI can
+archive the perf trajectory (``BENCH_*.json``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
+ROWS = []   # every emitted row, for --json
+
 
 def _emit(name, us, derived):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -103,6 +126,154 @@ def _time_warm_refit(strategy, X, y, reps=3):
 DEFAULT_REFIT_EVERY = 8   # the Tuner default the amortized number models
 
 
+def _median_time(fn, reps=3):
+    """Median seconds for fn(); picks are host-read so the call is synced."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run_pallas_pending(n_obs_grid=(64, 256), n_pend=8, bs=4, n_cand=2000,
+                       dim=4, fit_steps=40, reps=3, seed=0):
+    """Async replacement pick on the Pallas scorer with in-flight trials.
+
+    ``pallas_pending_host``: the seed path — one host round-trip
+    (posterior + K^{-1} Schur append programs) per pending trial before the
+    fused pick can even start.  ``pallas_pending_fused``: the absorb phase
+    runs inside the one jit'd program (``fused_propose_pallas_pending``),
+    and per-slot rescoring uses the in-kernel rank-1 variance downdate
+    (O(n S) per slot, not O(n^2 S)).
+    """
+    from repro.core.strategies import FusedHallucinationStrategy
+
+    rng = np.random.default_rng(seed)
+    for n in n_obs_grid:
+        X = rng.uniform(size=(n, dim)).astype(np.float32)
+        y = np.sum(-(X - 0.5) ** 2, axis=-1).astype(np.float32)
+        y += 0.05 * rng.normal(size=n).astype(np.float32)
+        C = rng.uniform(size=(n_cand, dim)).astype(np.float32)
+        P = rng.uniform(size=(n_pend, dim)).astype(np.float32)
+
+        host = FusedHallucinationStrategy(dim, 1e6, fit_steps=fit_steps,
+                                          refit_every=10 ** 9,
+                                          use_pallas=True)
+        fused = FusedHallucinationStrategy(dim, 1e6, fit_steps=fit_steps,
+                                           refit_every=10 ** 9,
+                                           use_pallas=True)
+
+        def host_call():
+            st = host.gp.observe(X, y)           # steady state: no-op pass
+            st = host.gp.ensure_capacity(st, n_pend + bs)
+            st = host._absorb_pending(st, P)     # one program per pending
+            return host.pick_from_state(st, C, bs)
+
+        def fused_call():
+            return fused.propose(X, y, C, bs, pending=P)
+
+        host_call()      # warm jit caches (and take the one-time GP fit)
+        fused_call()
+        t_host = _median_time(host_call, reps=reps)
+        t_fused = _median_time(fused_call, reps=reps)
+        _emit(f"pallas_pending_host_bs{bs}_p{n_pend}_n{n}", t_host * 1e6,
+              "speedup=1.0x")
+        _emit(f"pallas_pending_fused_bs{bs}_p{n_pend}_n{n}", t_fused * 1e6,
+              f"speedup={t_host / max(t_fused, 1e-12):.1f}x")
+
+
+def run_perslot_rescore(n_grid=(64, 256, 1024), n_cand=2000, dim=4, reps=5,
+                        seed=0):
+    """The per-slot rescore op itself, old vs new, across training-set size.
+
+    ``pallas_rescore_full``: the seed per-slot op — re-run the full scoring
+    kernel (``t = k @ Kinv``: O(n^2 S)).  ``pallas_rescore_downdate``: the
+    in-kernel rank-1 variance downdate (matvec against the cached cross-
+    covariance block: O(n S)).  The *ratio across n rows* is the point:
+    full rescoring grows ~quadratically with n, the downdate ~linearly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.gp_acquisition.gp_acquisition import (
+        score_cov_pallas, ucb_scores_pallas, var_downdate_pallas)
+    from repro.kernels.gp_acquisition.ref import matern52
+
+    rng = np.random.default_rng(seed)
+    dp = 8
+    for n in n_grid:
+        X = rng.uniform(size=(n, dim)).astype(np.float32) * 2.0
+        Xs = np.zeros((n, dp), np.float32)
+        Xs[:, :dim] = X
+        mask = np.ones(n, np.float32)
+        var, noise = 1.0, 0.05
+        K = np.array(matern52(jnp.asarray(Xs), jnp.asarray(Xs), 1.0, var))
+        K[np.diag_indices(n)] = var + noise
+        Kinv = np.linalg.inv(K).astype(np.float32)
+        y = rng.normal(size=n).astype(np.float32)
+        alpha = (Kinv @ y).astype(np.float32)
+        Cs = np.zeros((n_cand, dp), np.float32)
+        Cs[:, :dim] = rng.uniform(size=(n_cand, dim)).astype(np.float32) * 2
+
+        args = (jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
+                jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+                jnp.float32(noise))
+        _, sig2, Kc = jax.block_until_ready(score_cov_pallas(*args))
+        star = 7
+        k_star = Kc[star]
+        u = jnp.asarray(np.linalg.solve(K, np.asarray(k_star))
+                        .astype(np.float32))
+        schur = jnp.float32(var + noise) - k_star @ u
+
+        def full_call():
+            return jax.block_until_ready(
+                ucb_scores_pallas(*args, jnp.float32(4.0)))
+
+        def downdate_call():
+            return jax.block_until_ready(var_downdate_pallas(
+                jnp.asarray(Cs), jnp.asarray(Cs[star]), Kc, u, schur,
+                sig2, jnp.float32(var)))
+
+        full_call()
+        downdate_call()
+        t_full = _median_time(full_call, reps=reps)
+        t_dd = _median_time(downdate_call, reps=reps)
+        _emit(f"pallas_rescore_full_n{n}", t_full * 1e6, "speedup=1.0x")
+        _emit(f"pallas_rescore_downdate_n{n}", t_dd * 1e6,
+              f"speedup={t_full / max(t_dd, 1e-12):.1f}x")
+
+
+def run_clustering(n_obs_grid=(64, 256), bs=4, n_cand=2000, dim=4,
+                   fit_steps=40, reps=3, seed=0):
+    """Clustering batch proposal: host pipeline (acquisition surface +
+    top-slice + k-means all round-tripping through numpy) vs the fused
+    device program (``fused_cluster_propose`` — only the ``(batch_size,)``
+    indices leave the device)."""
+    from repro.core.strategies import ClusteringStrategy
+
+    rng = np.random.default_rng(seed)
+    for n in n_obs_grid:
+        X = rng.uniform(size=(n, dim)).astype(np.float32)
+        y = np.sum(-(X - 0.5) ** 2, axis=-1).astype(np.float32)
+        y += 0.05 * rng.normal(size=n).astype(np.float32)
+        C = rng.uniform(size=(n_cand, dim)).astype(np.float32)
+
+        host = ClusteringStrategy(dim, 1e6, fit_steps=fit_steps,
+                                  refit_every=10 ** 9)
+        fused = ClusteringStrategy(dim, 1e6, fit_steps=fit_steps,
+                                   refit_every=10 ** 9)
+        host.propose_host(X, y, C, bs, seed=0)   # warm jit + one-time fit
+        fused.propose(X, y, C, bs, seed=0)
+        t_host = _median_time(lambda: host.propose_host(X, y, C, bs,
+                                                        seed=0), reps=reps)
+        t_fused = _median_time(lambda: fused.propose(X, y, C, bs, seed=0),
+                               reps=reps)
+        _emit(f"clustering_host_bs{bs}_n{n}", t_host * 1e6, "speedup=1.0x")
+        _emit(f"clustering_fused_bs{bs}_n{n}", t_fused * 1e6,
+              f"speedup={t_host / max(t_fused, 1e-12):.1f}x")
+
+
 def run(batch_sizes=(1, 4, 16), n_obs_grid=(16, 64, 256, 512),
         n_cand=2000, dim=4, fit_steps=40, reps=3, seed=0):
     from repro.core.strategies import (FusedHallucinationStrategy,
@@ -157,16 +328,30 @@ def main():
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="small grid for smoke runs")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write every emitted row as JSON (the CI "
+                         "tier-2 job uploads this as BENCH_*.json)")
     args = ap.parse_args()
     if args.quick:
         rows = run(batch_sizes=(4,), n_obs_grid=(64, 256), reps=args.reps)
+        run_pallas_pending(n_obs_grid=(64,), reps=args.reps)
+        run_perslot_rescore(n_grid=(64, 256), reps=args.reps)
+        run_clustering(n_obs_grid=(64,), reps=args.reps)
     else:
         rows = run(reps=args.reps)
+        run_pallas_pending(reps=args.reps)
+        run_perslot_rescore(reps=args.reps)
+        run_clustering(reps=args.reps)
     target = [r for r in rows if r[0] == 4 and r[1] == 256]
     if target:
         bs, n, t_ref, t_fused, speedup = target[0]
         print(f"# CLAIM issue1 'fused >= 3x at batch_size=4, n_obs=256': "
               f"{speedup:.1f}x -> {'PASS' if speedup >= 3.0 else 'FAIL'}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "proposal_latency", "rows": ROWS}, f,
+                      indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

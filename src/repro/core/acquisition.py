@@ -1,16 +1,29 @@
-"""UCB acquisition with Mango's adaptive exploration/exploitation schedule.
+"""UCB acquisition with Mango's adaptive exploration/exploitation schedule,
+and the fused device-side clustering proposal built on top of it.
 
 beta follows the GP-UCB schedule (Srinivas et al.), scaled — as the paper
 describes — by search-space size, completed evaluations, and the position
 within the parallel batch (GP-BUCB increments t per hallucinated pick):
 
     beta_t = 2 * log(domain_size * t^2 * pi^2 / (6 * delta))
+
+``fused_cluster_propose`` is the clustering strategy's (Groves &
+Pyzer-Knapp 2018) whole pipeline as one jit'd device program: pending-trial
+absorb -> posterior + UCB -> ``jax.lax.top_k`` -> weighted k-means
+(``kmeans._kmeans``) -> per-cluster argmax.  Only the ``(batch_size,)``
+pick indices ever leave the device — the (n_mc,) acquisition surface and
+the top-quantile slice stay on it.
 """
 from __future__ import annotations
 
+import functools
 import math
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.kmeans import _kmeans
 
 
 def adaptive_beta(n_evals: int, domain_size: float, batch_index: int = 0,
@@ -23,3 +36,73 @@ def adaptive_beta(n_evals: int, domain_size: float, batch_index: int = 0,
 
 def ucb(mu: np.ndarray, sigma: np.ndarray, beta: float) -> np.ndarray:
     return mu + math.sqrt(beta) * sigma
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "n_top",
+                                             "pend_cap"))
+def fused_cluster_propose(X: jax.Array, y: jax.Array, mask: jax.Array,
+                          L: jax.Array, P: jax.Array, n_pending: jax.Array,
+                          C: jax.Array, ls, var, noise, n_obs: jax.Array,
+                          domain_size: jax.Array, key,
+                          batch_size: int, n_top: int,
+                          pend_cap: int) -> jax.Array:
+    """Device-resident clustering batch proposal: one program per ask.
+
+    1. Absorb the (padded, ``pend_cap``) pending buffer exactly the way the
+       host loop does — posterior mean at each in-flight point, rank-1
+       Cholesky hallucination (GP-BUCB semantics).
+    2. Posterior + adaptive-beta UCB over all candidates (standardized y
+       space; the de-standardized surface differs by a positive affine map,
+       so top-k and argmax are identical).
+    3. ``jax.lax.top_k`` keeps the ``n_top`` best; their scores (shifted to
+       positive) weight the k-means.
+    4. Weighted k-means (k-means++ seeding + Lloyd, ``kmeans._kmeans``)
+       splits the top set into ``batch_size`` spatial clusters.
+    5. Each cluster contributes its acquisition argmax; already-picked
+       points are excluded *before* each cluster's argmax and empty
+       clusters back-fill from the unpicked remainder of the top set, so
+       the batch is unique by construction (the host implementation's
+       post-hoc dedupe could silently collapse spatial diversity).
+    """
+    from repro.core import gp as gp_lib
+
+    def absorb(j, carry):
+        def do(c):
+            X, y, mask, L = c
+            x_new = P[j]
+            k_vec = gp_lib.matern52(X, x_new[None, :], ls, var)[:, 0] * mask
+            mu = k_vec @ jax.scipy.linalg.cho_solve((L, True), y * mask)
+            slot = (n_obs + j).astype(jnp.int32)
+            L2, X2, mask2 = gp_lib.chol_append(L, X, mask, slot, x_new,
+                                               ls, var, noise)
+            return X2, y.at[slot].set(mu), mask2, L2
+        return jax.lax.cond(j < n_pending, do, lambda c: c, carry)
+
+    carry = (X.astype(jnp.float32), y.astype(jnp.float32),
+             mask.astype(jnp.float32), L)
+    X, y, mask, L = jax.lax.fori_loop(0, pend_cap, absorb, carry)
+
+    Ks = gp_lib.matern52(X, C, ls, var) * mask[:, None]         # (n, S)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y * mask)
+    mu = Ks.T @ alpha
+    V = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
+    sig2 = jnp.maximum(var + noise - jnp.sum(V * V, axis=0), 1e-10)
+    beta = gp_lib.adaptive_beta_dev(n_obs + n_pending, domain_size)
+    acq = mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
+
+    top_vals, top_idx = jax.lax.top_k(acq, n_top)
+    w = top_vals - top_vals[n_top - 1] + 1e-6
+    assign = _kmeans(C[top_idx], w, key, batch_size)
+
+    def body(c, carry):
+        picked, picks = carry
+        in_c = (assign == c) & ~picked
+        sel = jnp.where(jnp.any(in_c), in_c, ~picked)   # empty-cluster fill
+        vals = jnp.where(sel, top_vals, -jnp.inf)
+        j = jnp.argmax(vals).astype(jnp.int32)
+        return picked.at[j].set(True), picks.at[c].set(top_idx[j])
+
+    _, picks = jax.lax.fori_loop(
+        0, batch_size, body,
+        (jnp.zeros((n_top,), bool), jnp.zeros((batch_size,), jnp.int32)))
+    return picks

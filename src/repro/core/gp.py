@@ -184,6 +184,19 @@ def _append_core(L: jax.Array, Kinv: jax.Array, idx: jax.Array,
                  k_vec: jax.Array, var, noise
                  ) -> Tuple[jax.Array, jax.Array]:
     """Rank-1 L/K^{-1} extension from a precomputed masked Matern column."""
+    L, Kinv, _, _ = _append_core_uv(L, Kinv, idx, k_vec, var, noise)
+    return L, Kinv
+
+
+def _append_core_uv(L: jax.Array, Kinv: jax.Array, idx: jax.Array,
+                    k_vec: jax.Array, var, noise
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``_append_core`` that also hands back the Schur pair (u, schur).
+
+    The fused Pallas slot loop feeds them straight into the rank-1 variance
+    downdate kernel — the same u/schur the K^{-1} extension consumes define
+    the per-candidate variance contraction of the extended system.
+    """
     n = L.shape[0]
     l_vec = jax.scipy.linalg.solve_triangular(L, k_vec, lower=True)
     u = jax.scipy.linalg.solve_triangular(L, l_vec, trans=1, lower=True)
@@ -193,7 +206,7 @@ def _append_core(L: jax.Array, Kinv: jax.Array, idx: jax.Array,
     l_nn = jnp.sqrt(jnp.maximum(var + noise + JITTER
                                 - jnp.sum(l_vec * l_vec), 1e-10))
     L = L.at[idx, :].set(l_vec.at[idx].set(l_nn))
-    return L, Kinv
+    return L, Kinv, u, schur
 
 
 def _schur_extend(Kinv: jax.Array, u: jax.Array, schur: jax.Array,
@@ -328,6 +341,72 @@ def fused_propose_pending(X: jax.Array, y: jax.Array, mask: jax.Array,
                        n_obs + n_pending, domain_size, batch_size)
 
 
+def _pallas_prescale(X, C, ls, block_s):
+    """Zero-pad d to a lane multiple and S to a block multiple, pre-divided
+    by the ARD lengthscales (padded columns contribute 0 to distances)."""
+    n, d = X.shape
+    S = C.shape[0]
+    dp = max(8, -(-d // 8) * 8)
+    Sp = -(-S // block_s) * block_s
+    Xs = jnp.zeros((n, dp), jnp.float32).at[:, :d].set(X / ls)
+    Cs = jnp.zeros((Sp, dp), jnp.float32).at[:S, :d].set(C / ls)
+    return Xs, Cs
+
+
+def _pallas_pick_downdate(Xs: jax.Array, y: jax.Array, mask: jax.Array,
+                          L: jax.Array, Kinv: jax.Array, Cs: jax.Array,
+                          S: int, var, noise, n_obs: jax.Array,
+                          domain_size: jax.Array, batch_size: int,
+                          block_s: int, interpret: bool) -> jax.Array:
+    """GP-BUCB slot loop on the Pallas scorer with O(n S) per-slot rescores.
+
+    One ``score_cov_pallas`` pass scores every candidate *and* caches the
+    masked cross-covariance block k(C, X).  Hallucinating at the posterior
+    mean leaves the mean invariant, so per slot only the variance moves:
+    the ``var_downdate_pallas`` kernel contracts it by ``(k(c, x*) -
+    k_c^T u)^2 / schur`` from the cached block — O(n S) — instead of
+    re-running the O(n^2 S) ``k @ Kinv`` quadratic form per slot.  The
+    cached block gains the picked point's column each slot, so later
+    downdates see the full extended system.
+    """
+    from repro.kernels.gp_acquisition.gp_acquisition import (
+        score_cov_pallas, var_downdate_pallas)
+
+    Sp = Cs.shape[0]
+    alpha = Kinv @ (y * mask)
+    mu, sig2, Kc = score_cov_pallas(Cs, Xs, mask, Kinv, alpha, var, noise,
+                                    block_s=block_s, interpret=interpret)
+
+    def pick(b, sig2, avail, picks):
+        beta = adaptive_beta_dev(n_obs + b, domain_size)
+        acq = mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
+        acq = jnp.where(avail, acq, -jnp.inf)
+        idx = jnp.argmax(acq).astype(jnp.int32)
+        return idx, picks.at[b].set(idx), avail.at[idx].set(False)
+
+    def body(b, carry):
+        L, Kinv, Kc, sig2, avail, picks = carry
+        idx, picks, avail = pick(b, sig2, avail, picks)
+        slot = (n_obs + b).astype(jnp.int32)
+        # the cached row IS the masked Matern column of the picked point
+        # (columns of not-yet-active slots are zero by construction)
+        k_vec = Kc[idx]
+        L, Kinv, u, schur = _append_core_uv(L, Kinv, slot, k_vec, var,
+                                            noise)
+        sig2, k_new = var_downdate_pallas(Cs, Cs[idx], Kc, u, schur, sig2,
+                                          var, block_s=block_s,
+                                          interpret=interpret)
+        Kc = Kc.at[:, slot].set(k_new)
+        return L, Kinv, Kc, sig2, avail, picks
+
+    carry = (L, Kinv.astype(jnp.float32), Kc, sig2,
+             jnp.arange(Sp) < S, jnp.zeros((batch_size,), jnp.int32))
+    carry = jax.lax.fori_loop(0, batch_size - 1, body, carry)
+    _, _, _, sig2, avail, picks = carry
+    _, picks, _ = pick(jnp.int32(batch_size - 1), sig2, avail, picks)
+    return picks
+
+
 @functools.partial(jax.jit,
                    static_argnames=("batch_size", "block_s", "interpret"))
 def fused_propose_pallas(X: jax.Array, y: jax.Array, mask: jax.Array,
@@ -336,57 +415,73 @@ def fused_propose_pallas(X: jax.Array, y: jax.Array, mask: jax.Array,
                          domain_size: jax.Array, batch_size: int,
                          block_s: int = 256,
                          interpret: bool = True) -> jax.Array:
-    """``fused_propose`` with the Pallas UCB scorer in the slot loop.
+    """``fused_propose`` with the Pallas scorer and in-kernel downdates.
 
     Scoring runs through ``kernels/gp_acquisition`` (fused Matern + posterior
-    + UCB epilogue on the MXU/VPU), which consumes K^{-1}; the hallucination
+    epilogue on the MXU/VPU), which consumes K^{-1}; the hallucination
     extends both L (rank-1 append) and K^{-1} (Schur complement) in O(n^2).
     The Schur vector u = K^{-1}k comes from two triangular solves against L
     rather than ``Kinv @ k`` — an order of magnitude tighter in float32 when
-    K is ill-conditioned.  Candidate count is padded to a block multiple and
-    d to a lane multiple on-device.
+    K is ill-conditioned — and the same (u, schur) pair drives the rank-1
+    variance downdate kernel, so per-slot rescoring is O(n S), not O(n^2 S).
     """
-    from repro.kernels.gp_acquisition.gp_acquisition import ucb_scores_pallas
-
-    n, d = X.shape
     S = C.shape[0]
-    dp = max(8, -(-d // 8) * 8)
-    Sp = -(-S // block_s) * block_s
-    Xs = jnp.zeros((n, dp), jnp.float32).at[:, :d].set(X / ls)
-    Cs = jnp.zeros((Sp, dp), jnp.float32).at[:S, :d].set(C / ls)
+    Xs, Cs = _pallas_prescale(X, C, ls, block_s)
+    return _pallas_pick_downdate(Xs, y.astype(jnp.float32),
+                                 mask.astype(jnp.float32), L, Kinv, Cs, S,
+                                 var, noise, n_obs, domain_size, batch_size,
+                                 block_s, interpret)
 
-    def pick(b, Xs, y, mask, Kinv, avail, picks):
-        alpha = Kinv @ (y * mask)
-        beta = adaptive_beta_dev(n_obs + b, domain_size)
-        acq = ucb_scores_pallas(Cs, Xs, mask, Kinv, alpha, var, noise,
-                                beta, block_s=block_s, interpret=interpret)
-        acq = jnp.where(avail, acq, -jnp.inf)
-        idx = jnp.argmax(acq).astype(jnp.int32)
-        return idx, alpha, picks.at[b].set(idx), avail.at[idx].set(False)
 
-    def body(b, carry):
-        Xs, y, mask, L, Kinv, avail, picks = carry
-        idx, alpha, picks, avail = pick(b, Xs, y, mask, Kinv, avail, picks)
-        slot = (n_obs + b).astype(jnp.int32)
-        x_new = Cs[idx]
-        # cross-covariance in pre-scaled coords (unit lengthscale)
-        k_vec = matern52(Xs, x_new[None, :], jnp.float32(1.0), var)[:, 0] \
-            * mask
-        mu_new = k_vec @ alpha
-        L, Kinv = _append_core(L, Kinv, slot, k_vec, var, noise)
-        Xs = Xs.at[slot].set(x_new)
-        mask = mask.at[slot].set(1.0)
-        y = y.at[slot].set(mu_new)
-        return Xs, y, mask, L, Kinv, avail, picks
+@functools.partial(jax.jit, static_argnames=("batch_size", "pend_cap",
+                                             "block_s", "interpret"))
+def fused_propose_pallas_pending(X: jax.Array, y: jax.Array,
+                                 mask: jax.Array, L: jax.Array,
+                                 Kinv: jax.Array, P: jax.Array,
+                                 n_pending: jax.Array, C: jax.Array,
+                                 ls, var, noise, n_obs: jax.Array,
+                                 domain_size: jax.Array, batch_size: int,
+                                 pend_cap: int, block_s: int = 256,
+                                 interpret: bool = True) -> jax.Array:
+    """``fused_propose_pallas`` with in-flight trials absorbed *inside* the
+    program (the async replacement-pick hot path on the Pallas scorer).
+
+    A leading ``fori_loop`` over the (padded, ``pend_cap``) pending buffer
+    hallucinates each in-flight configuration via the K^{-1}-tracking Schur
+    appends (``_append_core_uv``) — posterior mean at the pending point from
+    the current extended system, rank-1 L + K^{-1} extension, phantom y at
+    the mean — then the downdate pick loop runs with the observation counter
+    advanced by ``n_pending``.  One device dispatch total: the seed Pallas
+    path paid one host round-trip (posterior + append programs) *per*
+    in-flight trial before it could even start scoring.
+    """
+    S = C.shape[0]
+    Xs, Cs = _pallas_prescale(X, C, ls, block_s)
+    dp = Xs.shape[1]
+    d = X.shape[1]
+    Ps = jnp.zeros((pend_cap, dp), jnp.float32).at[:, :d].set(P / ls)
+
+    def absorb(j, carry):
+        def do(c):
+            Xs, y, mask, L, Kinv = c
+            x_new = Ps[j]
+            # cross-covariance in pre-scaled coords (unit lengthscale)
+            k_vec = matern52(Xs, x_new[None, :], jnp.float32(1.0),
+                             var)[:, 0] * mask
+            mu = k_vec @ (Kinv @ (y * mask))
+            slot = (n_obs + j).astype(jnp.int32)
+            L2, Kinv2, _, _ = _append_core_uv(L, Kinv, slot, k_vec, var,
+                                              noise)
+            return (Xs.at[slot].set(x_new), y.at[slot].set(mu),
+                    mask.at[slot].set(1.0), L2, Kinv2)
+        return jax.lax.cond(j < n_pending, do, lambda c: c, carry)
 
     carry = (Xs, y.astype(jnp.float32), mask.astype(jnp.float32), L,
-             Kinv.astype(jnp.float32), jnp.arange(Sp) < S,
-             jnp.zeros((batch_size,), jnp.int32))
-    carry = jax.lax.fori_loop(0, batch_size - 1, body, carry)
-    Xs, y, mask, L, Kinv, avail, picks = carry
-    _, _, picks, _ = pick(jnp.int32(batch_size - 1), Xs, y, mask, Kinv,
-                          avail, picks)
-    return picks
+             Kinv.astype(jnp.float32))
+    Xs, y, mask, L, Kinv = jax.lax.fori_loop(0, pend_cap, absorb, carry)
+    return _pallas_pick_downdate(Xs, y, mask, L, Kinv, Cs, S, var, noise,
+                                 n_obs + n_pending, domain_size, batch_size,
+                                 block_s, interpret)
 
 
 # --------------------------------------------------------------------------- #

@@ -111,15 +111,12 @@ class FusedHallucinationStrategy(BaseStrategy):
         """Window + dispatch the fused program against an explicit state.
 
         ``pending`` (encoded in-flight rows) rides along into the device
-        program: ``fused_propose_pending`` hallucinates them inside the
-        jit'd fori_loop, so an async replacement pick is still exactly one
-        GP program dispatch.  (The Pallas scorer path pre-absorbs them with
-        the host loop — its K^{-1} Schur appends are not yet fused.)
+        program: ``fused_propose_pending`` (or, on the Pallas scorer path,
+        ``fused_propose_pallas_pending`` with its K^{-1}-tracking Schur
+        absorb) hallucinates them inside the jit'd fori_loop, so an async
+        replacement pick is exactly one GP program dispatch on *both* paths.
         """
         n_pend = 0 if pending is None else len(pending)
-        if self.use_pallas and n_pend:
-            st = self._absorb_pending(st, pending)
-            n_pend, pending = 0, None
         # active window: a 64-multiple slice covering n + pending +
         # batch_size rows.  The leading principal block of L is the Cholesky
         # of the leading block of K, so slicing is exact — it just avoids
@@ -133,16 +130,23 @@ class FusedHallucinationStrategy(BaseStrategy):
                 jnp.asarray(st.mask[:na]))
         tail = (C, st.ls, st.var, st.noise, jnp.int32(st.n),
                 jnp.float32(self.domain_size))
-        if self.use_pallas:
-            picks = gp_lib.fused_propose_pallas(
-                *args, st.L[:na, :na], st.Kinv[:na, :na], *tail,
-                batch_size=batch_size, interpret=self.pallas_interpret)
-        elif n_pend:
+        if n_pend:
             # pad the pending buffer to a small static cap so the jit cache
             # sees a handful of shapes, not one per in-flight count
             cap = -(-n_pend // 4) * 4
             P = np.zeros((cap, st.X.shape[1]), np.float32)
             P[:n_pend] = np.asarray(pending, dtype=np.float32)
+        if self.use_pallas and n_pend:
+            picks = gp_lib.fused_propose_pallas_pending(
+                *args, st.L[:na, :na], st.Kinv[:na, :na],
+                jnp.asarray(P), jnp.int32(n_pend), *tail,
+                batch_size=batch_size, pend_cap=cap,
+                interpret=self.pallas_interpret)
+        elif self.use_pallas:
+            picks = gp_lib.fused_propose_pallas(
+                *args, st.L[:na, :na], st.Kinv[:na, :na], *tail,
+                batch_size=batch_size, interpret=self.pallas_interpret)
+        elif n_pend:
             picks = gp_lib.fused_propose_pending(
                 args[0], args[1], args[2], st.L[:na, :na],
                 jnp.asarray(P), jnp.int32(n_pend), *tail,
@@ -154,47 +158,87 @@ class FusedHallucinationStrategy(BaseStrategy):
 
 
 class ClusteringStrategy(BaseStrategy):
+    """Groves & Pyzer-Knapp 2018 batch selection, fully on-device.
+
+    ``propose`` dispatches ``acquisition.fused_cluster_propose`` — pending
+    absorb, posterior + UCB, ``lax.top_k``, weighted k-means, and the
+    per-cluster argmax all run inside one jit'd program; the (n_mc,)
+    acquisition surface never reaches the host.  ``propose_host`` keeps the
+    numpy pipeline as the parity reference (with the empty-cluster backfill
+    fixed to never re-select an already-picked index).
+    """
+
     def __init__(self, *args, top_frac: float = 0.2, **kwargs):
         super().__init__(*args, **kwargs)
         self.top_frac = top_frac
 
+    def _n_top(self, S: int, batch_size: int) -> int:
+        return min(max(batch_size * 4, int(S * self.top_frac)), S)
+
     def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
+        import jax
+
+        from repro.core.acquisition import fused_cluster_propose
+
+        S = len(candidates)
+        batch_size = min(batch_size, S)
+        st = self.gp.observe(X, y)
+        n_pend = 0 if pending is None else len(pending)
+        st = self.gp.ensure_capacity(st, n_pend)
+        # pad the pending buffer to a small static cap (>= 4 so the no-
+        # pending trace never indexes an empty buffer)
+        cap = max(4, -(-n_pend // 4) * 4)
+        P = np.zeros((cap, st.X.shape[1]), np.float32)
+        if n_pend:
+            P[:n_pend] = np.asarray(pending, dtype=np.float32)
+        n_pad = st.X.shape[0]
+        na = min(n_pad, max(16, -(-(st.n + n_pend) // 64) * 64))
+        picks = fused_cluster_propose(
+            jnp.asarray(st.X[:na]), jnp.asarray(st.y[:na]),
+            jnp.asarray(st.mask[:na]), st.L[:na, :na],
+            jnp.asarray(P), jnp.int32(n_pend),
+            jnp.asarray(np.ascontiguousarray(candidates, dtype=np.float32)),
+            st.ls, st.var, st.noise, jnp.int32(st.n),
+            jnp.float32(self.domain_size), jax.random.PRNGKey(seed),
+            batch_size=batch_size, n_top=self._n_top(S, batch_size),
+            pend_cap=cap)
+        return [int(i) for i in np.asarray(picks)]
+
+    def propose_host(self, X, y, candidates, batch_size, seed=0,
+                     pending=None):
+        """Numpy reference pipeline (the parity oracle for the device
+        program): standardized acquisition surface, descending-sorted top
+        slice, host k-means, per-cluster argmax excluding prior picks."""
+        import jax
+
+        batch_size = min(batch_size, len(candidates))
         st = self.gp.observe(X, y)
         n_pend = 0 if pending is None else len(pending)
         if n_pend:
             st = self._absorb_pending(st, pending)
-        mu, sd = self._predict(st, candidates)
+        mu, var_s = gp_lib.posterior(
+            jnp.asarray(st.X), jnp.asarray(st.y), jnp.asarray(st.mask),
+            st.L, jnp.asarray(candidates, dtype=jnp.float32),
+            st.ls, st.var, st.noise)
+        mu, sd = np.asarray(mu), np.sqrt(np.asarray(var_s))
         beta = adaptive_beta(len(y) + n_pend, self.domain_size)
         acq = ucb(mu, sd, beta)
         if batch_size == 1:
             return [int(np.argmax(acq))]
-        n_top = max(batch_size * 4, int(len(candidates) * self.top_frac))
-        n_top = min(n_top, len(candidates))
-        top = np.argpartition(-acq, n_top - 1)[:n_top]
+        n_top = self._n_top(len(candidates), batch_size)
+        top = np.argsort(-acq, kind="stable")[:n_top]
         w = acq[top] - acq[top].min() + 1e-6
         assign = kmeans_assign(candidates[top], w, batch_size, seed=seed)
-        picked = []
+        picked: List[int] = []
         for c in range(batch_size):
             members = top[assign == c]
+            members = members[~np.isin(members, picked)]
+            if len(members) == 0:   # empty cluster: back-fill from the
+                members = top[~np.isin(top, picked)]   # unpicked remainder
             if len(members) == 0:
-                rest = np.setdiff1d(top, np.array(picked, dtype=top.dtype))
-                members = rest if len(rest) else top
-            best = members[np.argmax(acq[members])]
-            picked.append(int(best))
-        # dedupe while preserving order; backfill with next-best acq
-        seen, uniq = set(), []
-        for p in picked:
-            if p not in seen:
-                uniq.append(p)
-                seen.add(p)
-        if len(uniq) < batch_size:
-            for p in np.argsort(-acq):
-                if int(p) not in seen:
-                    uniq.append(int(p))
-                    seen.add(int(p))
-                if len(uniq) == batch_size:
-                    break
-        return uniq
+                break
+            picked.append(int(members[np.argmax(acq[members])]))
+        return picked
 
 
 class RandomStrategy(BaseStrategy):
@@ -205,7 +249,10 @@ class RandomStrategy(BaseStrategy):
 
     def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
         rng = np.random.default_rng(seed)
-        return list(rng.choice(len(candidates), size=batch_size,
+        # clamp: a small mc_samples override can leave fewer candidates
+        # than batch slots — return what exists instead of raising
+        return list(rng.choice(len(candidates),
+                               size=min(batch_size, len(candidates)),
                                replace=False))
 
 

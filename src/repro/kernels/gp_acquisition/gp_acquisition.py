@@ -82,3 +82,141 @@ def ucb_scores_pallas(cands, X, mask, Kinv, alpha, var, noise, beta,
       mask[None, :].astype(jnp.float32), Kinv.astype(jnp.float32),
       alpha[None, :].astype(jnp.float32), scal.astype(jnp.float32))
     return out[:, 0]
+
+
+def _score_cov_kernel(c_ref, x_ref, mask_ref, kinv_ref, alpha_ref, scal_ref,
+                      mu_ref, sig2_ref, k_ref):
+    """Posterior scoring pass that also *emits* the masked cross-covariance
+    block k(C, X) so the batch slot loop can rescore candidates with O(n S)
+    rank-1 variance downdates (``_downdate_kernel``) instead of re-running
+    the O(n^2 S) ``t = k @ Kinv`` quadratic form per slot."""
+    c = c_ref[...]                      # (BS, d)  already / lengthscale
+    x = x_ref[...]                      # (n, d)   already / lengthscale
+    mask = mask_ref[...]                # (1, n)
+    var = scal_ref[0, 0]
+    noise = scal_ref[0, 1]
+
+    c2 = jnp.sum(c * c, axis=-1, keepdims=True)          # (BS, 1)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True).T        # (1, n)
+    d2 = jnp.maximum(c2 + x2 - 2.0 * jax.lax.dot(
+        c, x.T, preferred_element_type=jnp.float32), 0.0)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    s = jnp.sqrt(5.0) * r
+    k = var * (1.0 + s + (5.0 / 3.0) * d2) * jnp.exp(-s) * mask  # (BS, n)
+
+    t = jax.lax.dot(k, kinv_ref[...],
+                    preferred_element_type=jnp.float32)   # (BS, n)
+    q = jnp.sum(t * k, axis=-1)
+    mu = jnp.sum(k * alpha_ref[...], axis=-1)             # alpha (1, n)
+    sig2 = jnp.maximum(var + noise - q, 1e-10)
+    mu_ref[...] = mu[:, None]
+    sig2_ref[...] = sig2[:, None]
+    k_ref[...] = k
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def score_cov_pallas(cands, X, mask, Kinv, alpha, var, noise,
+                     block_s: int = 256, interpret: bool = True):
+    """(mu, sig2, cross-covariance block) for cands (S, d) pre-scaled."""
+    S, d = cands.shape
+    n = X.shape[0]
+    scal = jnp.stack([var, noise, jnp.zeros_like(var),
+                      jnp.zeros_like(var)])[None, :]
+    grid = (S // block_s,)
+    mu, sig2, k = pl.pallas_call(
+        _score_cov_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cands.astype(jnp.float32), X.astype(jnp.float32),
+      mask[None, :].astype(jnp.float32), Kinv.astype(jnp.float32),
+      alpha[None, :].astype(jnp.float32), scal.astype(jnp.float32))
+    return mu[:, 0], sig2[:, 0], k
+
+
+def _downdate_kernel(c_ref, xs_ref, kc_ref, u_ref, sig2_ref, scal_ref,
+                     sig2_out_ref, knew_ref):
+    """Rank-1 GP-BUCB variance downdate for one absorbed point x*.
+
+    Per candidate c: the posterior variance of the system extended by x*
+    contracts by ``(k(c, x*) - k_c^T u)^2 / schur`` where ``u = K^{-1} k_*``
+    is the Schur vector of the append and ``k_c`` the *cached* cross-
+    covariance row — O(n) per candidate (one matvec against the cached
+    block + a fresh (BS,) Matern column) instead of the O(n^2) quadratic
+    form a full rescore pays.  Emits the new column k(C, x*) so the caller
+    can extend the cached block for the next slot.
+    """
+    c = c_ref[...]                      # (BS, d)  already / lengthscale
+    xs = xs_ref[...]                    # (1, d)   the absorbed point, scaled
+    var = scal_ref[0, 0]
+    schur = scal_ref[0, 1]
+
+    c2 = jnp.sum(c * c, axis=-1, keepdims=True)          # (BS, 1)
+    x2 = jnp.sum(xs * xs, axis=-1, keepdims=True).T      # (1, 1)
+    d2 = jnp.maximum(c2 + x2 - 2.0 * jax.lax.dot(
+        c, xs.T, preferred_element_type=jnp.float32), 0.0)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    s = jnp.sqrt(5.0) * r
+    knew = var * (1.0 + s + (5.0 / 3.0) * d2) * jnp.exp(-s)      # (BS, 1)
+
+    proj = knew - jax.lax.dot(kc_ref[...], u_ref[...].T,
+                              preferred_element_type=jnp.float32)  # (BS, 1)
+    sig2 = jnp.maximum(sig2_ref[...] - proj * proj / schur, 1e-10)
+    sig2_out_ref[...] = sig2
+    knew_ref[...] = knew
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def var_downdate_pallas(cands, x_star, Kc, u, schur, sig2, var,
+                        block_s: int = 256, interpret: bool = True):
+    """Apply the rank-1 downdate; returns (sig2', k(C, x*)).
+
+    cands (S, d) and x_star (d,) pre-scaled by lengthscale; Kc (S, n) the
+    cached masked cross-covariance block; u (n,) the Schur vector.
+    """
+    S, d = cands.shape
+    n = Kc.shape[1]
+    scal = jnp.stack([var, schur, jnp.zeros_like(var),
+                      jnp.zeros_like(var)])[None, :]
+    grid = (S // block_s,)
+    sig2_out, knew = pl.pallas_call(
+        _downdate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),   # cached block
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cands.astype(jnp.float32), x_star[None, :].astype(jnp.float32),
+      Kc.astype(jnp.float32), u[None, :].astype(jnp.float32),
+      sig2[:, None].astype(jnp.float32), scal.astype(jnp.float32))
+    return sig2_out[:, 0], knew[:, 0]

@@ -13,12 +13,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gp_acquisition.gp_acquisition import ucb_scores_pallas
+from repro.kernels.gp_acquisition.gp_acquisition import (score_cov_pallas,
+                                                         ucb_scores_pallas)
 from repro.kernels.gp_acquisition.ref import ucb_scores_ref
 
 
 def _pad_rows(a: np.ndarray, m: int) -> np.ndarray:
     return np.pad(a, [(0, m - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+
+def _prescale(cands, X, ls, block_s):
+    cands = np.asarray(cands, np.float32)
+    S, d = cands.shape
+    dp = max(8, int(math.ceil(d / 8)) * 8)
+    Sp = int(math.ceil(S / block_s)) * block_s
+    ls = np.broadcast_to(np.asarray(ls, np.float32), (d,))
+    c = np.zeros((Sp, dp), np.float32)
+    c[:S, :d] = cands / ls
+    Xp = np.zeros((X.shape[0], dp), np.float32)
+    Xp[:, :d] = np.asarray(X, np.float32) / ls
+    return c, Xp, S
+
+
+def score_cov(cands, X, mask, Kinv, alpha, ls, var, noise, *,
+              block_s: int = 256, interpret: bool = True):
+    """(mu, sig2) for every candidate in ONE kernel dispatch (the cached
+    cross-covariance block the kernel also emits is dropped here)."""
+    c, Xp, S = _prescale(cands, X, ls, block_s)
+    mu, sig2, _ = score_cov_pallas(
+        jnp.asarray(c), jnp.asarray(Xp), jnp.asarray(mask, jnp.float32),
+        jnp.asarray(Kinv, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
+        block_s=block_s, interpret=interpret)
+    return np.asarray(mu)[:S], np.asarray(sig2)[:S]
 
 
 def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
@@ -32,13 +59,7 @@ def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
             jnp.asarray(cands), jnp.asarray(X), jnp.asarray(mask),
             jnp.asarray(Kinv), jnp.asarray(alpha), jnp.asarray(ls),
             jnp.asarray(var), jnp.asarray(noise), jnp.asarray(beta)))
-    dp = max(8, int(math.ceil(d / 8)) * 8)
-    Sp = int(math.ceil(S / block_s)) * block_s
-    ls = np.broadcast_to(np.asarray(ls, np.float32), (d,))
-    c = np.zeros((Sp, dp), np.float32)
-    c[:S, :d] = cands / ls
-    Xp = np.zeros((X.shape[0], dp), np.float32)
-    Xp[:, :d] = np.asarray(X, np.float32) / ls
+    c, Xp, S = _prescale(cands, X, ls, block_s)
     out = ucb_scores_pallas(
         jnp.asarray(c), jnp.asarray(Xp), jnp.asarray(mask, jnp.float32),
         jnp.asarray(Kinv, jnp.float32), jnp.asarray(alpha, jnp.float32),
@@ -63,10 +84,8 @@ def gp_mean_std(st, cands, interpret: bool = True):
                     * np.asarray(st.mask, np.float32))
     var = float(st.var)
     noise = float(st.noise)
-    # beta=0 -> returns mu; run twice (mu, then ucb with beta=1) to get sd
-    mu = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
-                    var, noise, 0.0, interpret=interpret)
-    u1 = ucb_scores(cands, st.X, st.mask, Kinv, alpha, np.asarray(st.ls),
-                    var, noise, 1.0, interpret=interpret)
-    sd = np.maximum(u1 - mu, 0.0)
-    return mu * st.y_std + st.y_mean, sd * st.y_std
+    # one scoring-kernel dispatch yields both moments (the old path ran
+    # the UCB kernel twice, with beta=0 and beta=1, to recover sd)
+    mu, sig2 = score_cov(cands, st.X, st.mask, Kinv, alpha,
+                         np.asarray(st.ls), var, noise, interpret=interpret)
+    return mu * st.y_std + st.y_mean, np.sqrt(sig2) * st.y_std

@@ -34,3 +34,25 @@ def ucb_scores_ref(cands, X, mask, Kinv, alpha, ls, var, noise, beta):
     q = jnp.sum(t * K, axis=-1)
     sig2 = jnp.maximum(var + noise - q, 1e-10)
     return mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
+
+
+def score_cov_ref(cands, X, mask, Kinv, alpha, ls, var, noise):
+    """Oracle for the score+cross-covariance kernel: (mu, sig2, k(C, X))."""
+    K = matern52(cands, X, ls, var) * mask[None, :]       # (S, n)
+    mu = K @ alpha
+    q = jnp.sum((K @ Kinv) * K, axis=-1)
+    sig2 = jnp.maximum(var + noise - q, 1e-10)
+    return mu, sig2, K
+
+
+def var_downdate_ref(cands, x_star, Kc, u, schur, sig2, ls, var):
+    """Oracle for the rank-1 variance downdate kernel.
+
+    After absorbing x* with Schur vector u = K^{-1} k_* and complement
+    ``schur``, each candidate's posterior variance contracts by
+    ``(k(c, x*) - k_c^T u)^2 / schur`` — exactly the extended system's
+    block-inverse quadratic form, at O(n) per candidate.
+    """
+    knew = matern52(cands, x_star[None, :], ls, var)[:, 0]      # (S,)
+    proj = knew - Kc @ u
+    return jnp.maximum(sig2 - proj * proj / schur, 1e-10), knew

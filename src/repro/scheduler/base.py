@@ -26,6 +26,8 @@ protocols natively.
 from __future__ import annotations
 
 import threading
+import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 TrialFn = Callable[[Dict[str, Any]], float]
@@ -91,19 +93,51 @@ class BatchToAsyncAdapter:
     def __init__(self, scheduler: Scheduler):
         self.scheduler = scheduler
         self._cv = threading.Condition()
-        self._objectives: Dict[int, Objective] = {}   # id(fn) -> objective
+        # keyed by the fn object itself, weakly: an ``id(fn)`` key outlives
+        # the fn, so a later fn allocated at the recycled address would
+        # silently inherit the *old* objective (and every entry would leak
+        # for the adapter's lifetime)
+        self._objectives: "weakref.WeakKeyDictionary[TrialFn, Objective]" \
+            = weakref.WeakKeyDictionary()
 
-    def _objective_for(self, fn: TrialFn) -> Objective:
-        key = id(fn)
-        if key not in self._objectives:
-            self._objectives[key] = self.scheduler.make_objective(fn)
-        return self._objectives[key]
+    def _objective_for(self, fn: TrialFn) -> Tuple[Objective, TrialFn]:
+        """Returns (objective, pin): ``pin`` is the exact fn object the
+        cached objective weak-references, and the caller must keep it
+        alive for the trial's duration.  Lookups are by equality, so an
+        equal-but-distinct callable (a fresh bound-method object) can hit
+        an entry wrapping an *earlier* object — pinning the wrapped object
+        itself (not the argument) is what makes that reuse safe."""
+        try:
+            ent = self._objectives.get(fn)
+            if ent is not None:
+                wrapped = ent[0]()
+                if wrapped is not None:
+                    return ent[1], wrapped
+            # the objective must not hold fn strongly, or the cache entry
+            # (value -> fn -> key) could never be collected; the weak
+            # indirection is resolved per call, and ``submit`` pins the
+            # wrapped fn for each in-flight trial's duration
+            fn_ref = weakref.ref(fn)
+
+            def call_fn(par):
+                live = fn_ref()
+                if live is None:
+                    raise RuntimeError(
+                        "trial fn was garbage-collected while cached")
+                return live(par)
+
+            obj = self.scheduler.make_objective(call_fn)
+            self._objectives[fn] = (fn_ref, obj)
+            return obj, fn
+        except TypeError:
+            # unhashable / non-weak-referenceable callables: skip the cache
+            return self.scheduler.make_objective(fn), fn
 
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
         handle = TaskHandle(params)
-        objective = self._objective_for(fn)
+        objective, pin = self._objective_for(fn)
 
-        def run():
+        def run(_pin_fn=pin):   # keep the wrapped fn alive for this trial
             try:
                 evals, _ = objective([params])
                 if evals:
@@ -145,11 +179,12 @@ class _PollingWaitShim:
     def wait_any(self, handles, timeout=None):
         if not handles:
             return []
-        import time
-        deadline = None if timeout is None else time.time() + timeout
+        # monotonic: an NTP wall-clock step must not corrupt the deadline
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             done = [h for h in handles if h.done.is_set()]
-            if done or (deadline is not None and time.time() >= deadline):
+            if done or (deadline is not None
+                        and time.monotonic() >= deadline):
                 return done
             time.sleep(self._poll)
 

@@ -95,22 +95,28 @@ class TaskQueueScheduler:
                     fail = self._rng.random() < self.faults.failure_rate
                     straggle = self._rng.random() < self.faults.straggler_rate
                 if straggle:
-                    self.stats["straggled"] += 1
+                    self._bump("straggled")
                     time.sleep(self.faults.straggler_delay)
                 if fail:
                     raise RuntimeError("injected worker failure")
                 task.result = float(fn(task.params))
-                self.stats["completed"] += 1
+                self._bump("completed")
                 self._finish(task)
             except Exception as e:  # noqa: BLE001
                 if task.retries < self.max_retries:
                     task.retries += 1
-                    self.stats["retried"] += 1
+                    self._bump("retried")
                     self._q.put((task, fn))
                 else:
                     task.error = e
-                    self.stats["failed"] += 1
+                    self._bump("failed")
                     self._finish(task)
+
+    def _bump(self, key: str) -> None:
+        # bare ``stats[k] += 1`` is a read-modify-write that loses counts
+        # when workers race on the same key
+        with self._lock:
+            self.stats[key] += 1
 
     def _finish(self, task: _Task) -> None:
         # notify under the condition lock: wait_any's predicate check and
@@ -121,6 +127,13 @@ class TaskQueueScheduler:
 
     # ------------------------------------------------------------- async API
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> _Task:
+        if self._stop.is_set():
+            # start() after shutdown() is a no-op (_started stays True), so
+            # the task would land in a queue no worker ever drains and
+            # wait_any would hang until its timeout
+            raise RuntimeError("submit() after shutdown(): this scheduler's "
+                               "workers have exited; create a new "
+                               "TaskQueueScheduler")
         self.start()
         task = _Task(params)
         self._q.put((task, fn))
@@ -139,11 +152,13 @@ class TaskQueueScheduler:
 
     def gather(self, tasks: List[_Task], timeout: Optional[float] = None
                ) -> Tuple[List[float], List[Dict[str, Any]]]:
-        deadline = None if timeout is None else time.time() + timeout
+        # monotonic deadline: a wall-clock (NTP) step must not stretch or
+        # collapse the per-batch timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         evals, params = [], []
         for t in tasks:
             remaining = (None if deadline is None
-                         else max(0.0, deadline - time.time()))
+                         else max(0.0, deadline - time.monotonic()))
             if t.done.wait(remaining) and t.error is None:
                 evals.append(t.result)
                 params.append(t.params)

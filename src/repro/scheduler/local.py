@@ -7,6 +7,8 @@ drive ``AsyncTuner``'s completion-event loop.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import threading
+import time
 from typing import Any, Dict, List, Optional
 
 from repro.scheduler.base import BatchSchedulerBase, Objective, TrialFn
@@ -30,11 +32,15 @@ class SerialScheduler(BatchSchedulerBase):
 
 
 class ThreadScheduler(BatchSchedulerBase):
-    """Thread-pool evaluation with a per-batch deadline.
+    """Threaded evaluation with a per-batch deadline.
 
     Results that miss the deadline (stragglers) are NOT waited for — the
     batch returns partially, exactly the paper's out-of-order/missing-results
-    contract.  Straggler futures are abandoned (daemon threads).
+    contract.  Trials run on *daemon* threads gated by a semaphore (at most
+    ``n_workers`` concurrent), so an abandoned straggler can never block
+    interpreter exit.  (``concurrent.futures.ThreadPoolExecutor`` workers
+    are non-daemon and joined at interpreter shutdown — one straggler past
+    the deadline would stall the whole process for as long as it runs.)
     """
 
     def __init__(self, n_workers: int = 4, timeout: Optional[float] = None):
@@ -43,21 +49,50 @@ class ThreadScheduler(BatchSchedulerBase):
 
     def make_objective(self, trial_fn: TrialFn) -> Objective:
         def objective(params_list):
-            evals, params = [], []
-            ex = cf.ThreadPoolExecutor(max_workers=self.n_workers)
-            futs = {ex.submit(trial_fn, par): par for par in params_list}
-            try:
-                for fut in cf.as_completed(futs, timeout=self.timeout):
-                    par = futs[fut]
-                    try:
-                        evals.append(float(fut.result()))
+            cv = threading.Condition()
+            gate = threading.BoundedSemaphore(self.n_workers)
+            cancelled = threading.Event()
+            evals: List[float] = []
+            params: List[Dict[str, Any]] = []
+            state = {"left": len(params_list)}
+
+            def run(par):
+                try:
+                    with gate:
+                        # deadline already fired while queued behind the
+                        # gate: never start the trial (matches the old
+                        # executor's cancel_futures semantics — only
+                        # already-*running* trials are abandoned mid-air)
+                        if cancelled.is_set():
+                            return
+                        v = float(trial_fn(par))
+                    with cv:
+                        evals.append(v)
                         params.append(par)
-                    except Exception:
-                        pass
-            except cf.TimeoutError:
-                pass  # deadline: return what we have
-            ex.shutdown(wait=False, cancel_futures=True)
-            return evals, params
+                except Exception:
+                    pass  # dropped -> tuner never observes it
+                finally:
+                    with cv:
+                        state["left"] -= 1
+                        cv.notify_all()
+
+            for par in params_list:
+                threading.Thread(target=run, args=(par,), daemon=True,
+                                 name="mango-thread-worker").start()
+            deadline = (None if self.timeout is None
+                        else time.monotonic() + self.timeout)
+            with cv:
+                while state["left"] > 0:
+                    rem = (None if deadline is None
+                           else deadline - time.monotonic())
+                    if rem is not None and rem <= 0:
+                        break  # deadline: return what we have
+                    cv.wait(rem)
+                # snapshot under the lock: a straggler landing after the
+                # deadline appends to the dead lists, not the result
+                out = (list(evals), list(params))
+            cancelled.set()
+            return out
 
         return objective
 

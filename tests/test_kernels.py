@@ -6,8 +6,12 @@ import pytest
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gp_acquisition.gp_acquisition import (score_cov_pallas,
+                                                         var_downdate_pallas)
 from repro.kernels.gp_acquisition.ops import ucb_scores
-from repro.kernels.gp_acquisition.ref import matern52, ucb_scores_ref
+from repro.kernels.gp_acquisition.ref import (matern52, score_cov_ref,
+                                              ucb_scores_ref,
+                                              var_downdate_ref)
 from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
@@ -89,3 +93,84 @@ def test_gp_acquisition(n, d, S):
         jnp.asarray(C / ls), jnp.asarray(X / ls), jnp.asarray(mask),
         jnp.asarray(Kinv), jnp.asarray(alpha), 1.0, var, noise, beta))
     np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def _gp_system(n=64, d=5, S=512, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(n, d)).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    mask[n - n // 4:] = 0.0
+    ls = np.full(d, 0.5, np.float32)
+    var, noise = 1.3, 0.01
+    K = np.asarray(matern52(jnp.asarray(X / ls), jnp.asarray(X / ls),
+                            1.0, var))
+    K = K * mask[:, None] * mask[None, :]
+    K[np.diag_indices(n)] = np.where(mask > 0, var + noise + 1e-6, 1.0)
+    Kinv = np.linalg.inv(K).astype(np.float32)
+    y = (rng.normal(size=n) * mask).astype(np.float32)
+    C = rng.uniform(size=(S, d)).astype(np.float32)
+    # pre-scaled, lane-padded coords (what the fused proposal feeds in)
+    dp = 8
+    Cs = np.zeros((S, dp), np.float32)
+    Cs[:, :d] = C / ls
+    Xs = np.zeros((n, dp), np.float32)
+    Xs[:, :d] = X / ls
+    return Xs, Cs, mask, K, Kinv, y, var, noise
+
+
+def test_gp_score_cov_kernel():
+    """score+cross-covariance kernel vs the jnp oracle (mu, sig2, block)."""
+    Xs, Cs, mask, _, Kinv, y, var, noise = _gp_system()
+    alpha = Kinv @ y
+    mu, sig2, Kc = score_cov_pallas(
+        jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
+        jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+        jnp.float32(noise))
+    mu_r, sig2_r, Kc_r = score_cov_ref(
+        jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
+        jnp.asarray(Kinv), jnp.asarray(alpha), 1.0, var, noise)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sig2), np.asarray(sig2_r),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Kc), np.asarray(Kc_r), atol=1e-5)
+
+
+def test_gp_var_downdate_kernel_matches_extended_system():
+    """The rank-1 downdate kernel equals (a) the jnp oracle and (b) the
+    from-scratch variance of the system extended by the absorbed point."""
+    Xs, Cs, mask, K, Kinv, y, var, noise = _gp_system()
+    alpha = Kinv @ y
+    _, sig2, Kc = score_cov_pallas(
+        jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
+        jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+        jnp.float32(noise))
+    star = 17                        # absorb candidate 17
+    x_star = Cs[star]
+    k_star = np.asarray(Kc)[star]    # masked cross-covariance row
+    u = np.linalg.solve(K, k_star).astype(np.float32)
+    schur = float(var + noise + 1e-6 - k_star @ u)
+    sig2_dd, k_new = var_downdate_pallas(
+        jnp.asarray(Cs), jnp.asarray(x_star), Kc, jnp.asarray(u),
+        jnp.float32(schur), sig2, jnp.float32(var))
+    sig2_ref, k_new_ref = var_downdate_ref(
+        jnp.asarray(Cs), jnp.asarray(x_star), Kc, jnp.asarray(u),
+        schur, sig2, 1.0, var)
+    np.testing.assert_allclose(np.asarray(sig2_dd), np.asarray(sig2_ref),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(k_new), np.asarray(k_new_ref),
+                               atol=1e-5)
+    # downdates can only shrink the variance
+    assert np.all(np.asarray(sig2_dd) <= np.asarray(sig2) + 1e-7)
+    # (b) from-scratch: append x* to K and recompute candidate variances —
+    # the downdate is the extended system's exact variance, not an
+    # approximation
+    n = Xs.shape[0]
+    K_ext = np.zeros((n + 1, n + 1), np.float32)
+    K_ext[:n, :n] = K
+    K_ext[:n, n] = K_ext[n, :n] = k_star
+    K_ext[n, n] = var + noise + 1e-6
+    kC_ext = np.concatenate([np.asarray(Kc),
+                             np.asarray(k_new)[:, None]], 1)     # (S, n+1)
+    t = kC_ext @ np.linalg.inv(K_ext)
+    sig2_scratch = np.maximum(var + noise - np.sum(t * kC_ext, -1), 1e-10)
+    np.testing.assert_allclose(np.asarray(sig2_dd), sig2_scratch, atol=2e-3)

@@ -115,13 +115,19 @@ def test_pending_absorbed_inside_fused_program():
     assert picks == ref.propose(X, y, C, 4, pending=P)
 
 
-def test_async_pick_is_single_gp_program(monkeypatch):
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_async_pick_is_single_gp_program(monkeypatch, use_pallas):
     """A replacement pick with k pending trials must dispatch exactly one
     fused GP program — not one posterior+append program per pending trial
-    (the seed's host loop)."""
+    (the seed's host loop).  Holds on the Cholesky path AND the Pallas
+    scorer path (whose K^{-1}-tracking absorb is now fused in-program)."""
     calls = {"fused_pending": 0, "fused_plain": 0, "host_hallucinate": 0}
-    orig_pending = gp_mod.fused_propose_pending
-    orig_plain = gp_mod.fused_propose
+    plain_name = ("fused_propose_pallas" if use_pallas
+                  else "fused_propose")
+    pending_name = ("fused_propose_pallas_pending" if use_pallas
+                    else "fused_propose_pending")
+    orig_pending = getattr(gp_mod, pending_name)
+    orig_plain = getattr(gp_mod, plain_name)
     orig_hall = gp_mod.GaussianProcess.hallucinate
 
     def count(key, orig):
@@ -130,14 +136,14 @@ def test_async_pick_is_single_gp_program(monkeypatch):
             return orig(*a, **k)
         return wrapper
 
-    monkeypatch.setattr(gp_mod, "fused_propose_pending",
+    monkeypatch.setattr(gp_mod, pending_name,
                         count("fused_pending", orig_pending))
-    monkeypatch.setattr(gp_mod, "fused_propose",
+    monkeypatch.setattr(gp_mod, plain_name,
                         count("fused_plain", orig_plain))
     monkeypatch.setattr(gp_mod.GaussianProcess, "hallucinate",
                         count("host_hallucinate", orig_hall))
 
-    opt = AskTellOptimizer(SPACE, seed=0, **FAST)
+    opt = AskTellOptimizer(SPACE, seed=0, use_pallas=use_pallas, **FAST)
     for t in opt.ask(4):               # random phase (no GP yet)
         opt.tell(t.id, quad(t.params))
     opt.ask(3)                         # no pending -> plain fused program

@@ -1,4 +1,9 @@
+import gc
+import subprocess
+import sys
+import textwrap
 import time
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -6,10 +11,12 @@ from scipy.stats import uniform
 
 from repro.core import Tuner
 from repro.core.async_tuner import AsyncTuner
-from repro.scheduler import (FaultInjection, SerialScheduler,
-                             TaskQueueScheduler, ThreadScheduler)
+from repro.scheduler import (BatchToAsyncAdapter, FaultInjection,
+                             SerialScheduler, TaskQueueScheduler,
+                             ThreadScheduler)
 
 SPACE = {"x": uniform(0, 1)}
+SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
 def trial(p):
@@ -40,6 +47,160 @@ def test_thread_scheduler_straggler_deadline():
     evals, params = obj([{"x": v} for v in (0.1, 0.2, 0.9, 0.8)])
     assert time.time() - t0 < 2.0  # did not wait for stragglers
     assert len(evals) == 2
+
+
+def test_thread_scheduler_straggler_does_not_block_exit():
+    """Fault-semantics contract: a deadline-exceeding trial is *abandoned*.
+    The seed implementation used ThreadPoolExecutor, whose non-daemon
+    workers are joined at interpreter exit — a straggler held the whole
+    process hostage for as long as it kept running."""
+    code = """
+        import sys, time
+        sys.path.insert(0, %r)
+        from repro.scheduler.local import ThreadScheduler
+
+        def slow_or_fast(p):
+            if p["slow"]:
+                time.sleep(60.0)   # would block exit if joined
+            return 1.0
+
+        obj = ThreadScheduler(n_workers=2, timeout=0.3).make_objective(
+            slow_or_fast)
+        evals, params = obj([{"slow": True}, {"slow": False}])
+        print("DONE", len(evals))
+    """ % SRC
+    t0 = time.monotonic()
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=30)
+    elapsed = time.monotonic() - t0
+    assert out.returncode == 0, out.stderr
+    assert "DONE 1" in out.stdout
+    # the straggler sleeps 60s; a joined (non-daemon) thread would hold the
+    # subprocess far past this bound
+    assert elapsed < 15.0
+
+
+def test_adapter_objective_cache_is_weak_and_per_object():
+    """The adapter's objective cache must key on the fn *object*, not
+    ``id(fn)``: ids are recycled after GC, so a fresh fn could silently
+    inherit a stale objective, and id-keyed entries leak forever."""
+    class CountingScheduler(SerialScheduler):
+        def __init__(self):
+            self.built = []
+
+        def make_objective(self, trial_fn):
+            self.built.append(trial_fn)
+            return super().make_objective(trial_fn)
+
+    sched = CountingScheduler()
+    adapter = BatchToAsyncAdapter(sched)
+
+    def make_fn(c):
+        def fn(p):
+            return c
+        return fn
+
+    f1 = make_fn(1.0)
+    obj1 = adapter._objective_for(f1)[0]
+    assert adapter._objective_for(f1)[0] is obj1   # cached per object
+    assert len(sched.built) == 1
+    del f1
+    gc.collect()
+    assert len(adapter._objectives) == 0           # no leak after GC
+    # a new fn (possibly allocated at the recycled id) gets a *fresh*
+    # objective, never the stale one
+    f2 = make_fn(2.0)
+    obj2 = adapter._objective_for(f2)[0]
+    assert obj2 is not obj1
+    assert len(sched.built) == 2
+    assert obj2([{"x": 0.0}])[0] == [2.0]
+    # unhashable callables fall back to per-call objectives, uncached
+    class UnhashableFn:
+        __hash__ = None
+
+        def __call__(self, p):
+            return 3.0
+
+    u = UnhashableFn()
+    assert adapter._objective_for(u)[0]([{"x": 0.0}])[0] == [3.0]
+    assert len(adapter._objectives) == 1           # only f2 cached
+
+
+def test_adapter_pins_wrapped_fn_for_equal_bound_methods():
+    """Bound methods are equal-but-distinct objects per access: a cache hit
+    wraps the *first* object, so the caller must pin that one — otherwise
+    it can be GC'd while the reusing trial is still in flight and the
+    trial spuriously fails."""
+    class Trialer:
+        def trial(self, p):
+            return float(p["x"])
+
+    t = Trialer()
+    adapter = BatchToAsyncAdapter(SerialScheduler())
+    m1 = t.trial
+    obj1, pin1 = adapter._objective_for(m1)
+    m2 = t.trial
+    assert m2 is not m1 and m2 == m1
+    obj2, pin2 = adapter._objective_for(m2)
+    assert obj2 is obj1          # equality hit reuses the objective...
+    assert pin2 is m1            # ...and pins the object it actually wraps
+    # end-to-end: churning bound methods across submits never goes stale
+    handles = [adapter.submit(t.trial, {"x": float(i)}) for i in range(4)]
+    gc.collect()
+    while not all(h.done.is_set() for h in handles):
+        adapter.wait_any(handles, timeout=5.0)
+    assert [h.error for h in handles] == [None] * 4
+    assert sorted(h.result for h in handles) == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_thread_scheduler_deadline_cancels_unstarted_trials():
+    """Trials still queued behind the worker gate when the deadline fires
+    must never start (the old executor cancelled its unstarted futures;
+    the daemon rewrite must not regress into running the whole backlog on
+    abandoned threads)."""
+    import threading as th
+
+    started = []
+    lock = th.Lock()
+
+    def slow(p):
+        with lock:
+            started.append(p["i"])
+        time.sleep(0.8)
+        return 1.0
+
+    obj = ThreadScheduler(n_workers=2, timeout=0.3).make_objective(slow)
+    evals, _ = obj([{"i": k} for k in range(12)])
+    assert evals == []            # nothing finishes inside the deadline
+    time.sleep(1.5)               # give any buggy backlog time to run
+    with lock:
+        assert len(started) <= 4  # only in-flight waves, never the backlog
+
+
+def test_taskqueue_submit_after_shutdown_raises():
+    """submit() after shutdown() used to enqueue into a dead queue (start()
+    no-ops once _started is set) and wait_any hung until timeout."""
+    sched = TaskQueueScheduler(n_workers=2)
+    h = sched.submit(trial, {"x": 0.4})
+    assert sched.wait_any([h], timeout=5.0) == [h]
+    sched.shutdown()
+    with pytest.raises(RuntimeError, match="shutdown"):
+        sched.submit(trial, {"x": 0.5})
+
+
+def test_taskqueue_stats_consistent_under_worker_races():
+    """Counter increments run under the scheduler lock: completed+failed
+    must exactly equal the number of finished tasks."""
+    sched = TaskQueueScheduler(
+        n_workers=8, max_retries=1,
+        faults=FaultInjection(failure_rate=0.3, seed=3))
+    tasks = [sched.submit(trial, {"x": v})
+             for v in np.linspace(0, 1, 64)]
+    evals, _ = sched.gather(tasks, timeout=30.0)
+    assert all(t.done.is_set() for t in tasks)
+    assert sched.stats["completed"] + sched.stats["failed"] == 64
+    assert sched.stats["completed"] == len(evals)
+    sched.shutdown()
 
 
 def test_taskqueue_fault_injection_and_retry():

@@ -46,6 +46,49 @@ def test_random_strategy_no_gp():
     assert len(set(picked)) == 8
 
 
+def test_random_strategy_clamps_small_candidate_set():
+    """batch_size > n_candidates (tiny mc_samples override) must degrade
+    gracefully instead of raising ValueError from rng.choice."""
+    s = RandomStrategy()
+    picked = s.propose(None, [], np.zeros((3, 2)), 8, seed=0)
+    assert sorted(int(p) for p in picked) == [0, 1, 2]
+
+
+def test_clustering_empty_cluster_backfill_never_duplicates():
+    """Duplicated candidate locations force k-means to leave clusters
+    empty; the backfill must never re-select an already-picked index (the
+    old ``members = rest if len(rest) else top`` path could, silently
+    collapsing the batch's spatial diversity)."""
+    X, y, _ = _data(seed=3)
+    # 3 distinct locations repeated -> k=5 clustering has >= 2 empty slots
+    base = np.array([[0.1, 0.1], [0.5, 0.5], [0.9, 0.9]], np.float32)
+    C = np.repeat(base, 7, axis=0)
+    for seed in range(4):
+        s = ClusteringStrategy(2, 1e4, fit_steps=10)
+        picked = s.propose_host(X, y, C, batch_size=5, seed=seed)
+        assert len(picked) == len(set(picked)) == 5
+        dev = ClusteringStrategy(2, 1e4, fit_steps=10)
+        picked_dev = dev.propose(X, y, C, batch_size=5, seed=seed)
+        assert len(picked_dev) == len(set(picked_dev)) == 5
+
+
+def test_clustering_propose_stays_on_device(monkeypatch):
+    """The fused clustering path must not materialize the acquisition
+    surface on host: neither the host predict adapter nor the host k-means
+    may run."""
+    import repro.core.strategies as strat_mod
+
+    def boom(*a, **k):
+        raise AssertionError("host acquisition/k-means path was used")
+
+    monkeypatch.setattr(strat_mod.ClusteringStrategy, "_predict", boom)
+    monkeypatch.setattr(strat_mod, "kmeans_assign", boom)
+    X, y, C = _data(seed=1)
+    s = ClusteringStrategy(2, 1e4, fit_steps=15)
+    picked = s.propose(X, y, C, batch_size=5, seed=0)
+    assert len(set(picked)) == 5
+
+
 def test_kmeans_partitions():
     rng = np.random.default_rng(0)
     X = np.concatenate([rng.normal(0, 0.05, (30, 2)),
