@@ -1,0 +1,80 @@
+"""Diff two ``BENCH_*.json`` perf-trajectory files row by row.
+
+The CI ``bench`` job restores the previous push's JSON from the actions
+cache, runs the quick grid, and pipes this tool's markdown table into
+``$GITHUB_STEP_SUMMARY`` — a per-row regression view on every consecutive
+push to a branch, without gating merges on noisy CI timings (the job stays
+non-blocking; this tool always exits 0 unless inputs are unreadable).
+
+    python benchmarks/bench_delta.py OLD.json NEW.json [--threshold 1.15]
+
+Rows are matched by ``name``.  A row is flagged as a regression when
+``new/old > threshold`` (default +15%, roughly the noise floor of shared CI
+runners for these microbenchmarks) and as an improvement below the inverse.
+Added/removed rows are listed, not flagged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def delta_table(old, new, threshold=1.15):
+    """Markdown lines comparing two {name: us_per_call} dicts."""
+    lines = ["| row | old (us) | new (us) | delta | |",
+             "|---|---:|---:|---:|---|"]
+    n_reg = 0
+    for name in new:
+        if name not in old:
+            continue
+        o, n = old[name], new[name]
+        ratio = n / o if o > 0 else float("inf")
+        flag = ""
+        if ratio > threshold:
+            flag = "REGRESSION"
+            n_reg += 1
+        elif ratio < 1.0 / threshold:
+            flag = "improved"
+        lines.append(f"| `{name}` | {o:.1f} | {n:.1f} | "
+                     f"{(ratio - 1.0) * 100:+.1f}% | {flag} |")
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    if added:
+        lines.append("")
+        lines.append("New rows: " + ", ".join(f"`{a}`" for a in added))
+    if removed:
+        lines.append("")
+        lines.append("Removed rows: " + ", ".join(f"`{r}`"
+                                                  for r in removed))
+    header = (f"### Bench delta vs previous push — "
+              f"{n_reg} row(s) over the +{(threshold - 1) * 100:.0f}% "
+              f"threshold")
+    return [header, ""] + lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=1.15,
+                    help="regression flag at new/old above this ratio")
+    args = ap.parse_args()
+    try:
+        old = load_rows(args.old)
+        new = load_rows(args.new)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench_delta: unreadable input: {e}", file=sys.stderr)
+        return 1
+    print("\n".join(delta_table(old, new, args.threshold)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,10 +8,6 @@ the default is a moderate configuration sized for this container.
 from __future__ import annotations
 
 import argparse
-import sys
-import time
-
-import numpy as np
 
 
 def emit(name, us, derived):
@@ -24,52 +20,12 @@ def main() -> None:
     ap.add_argument("--skip-fig2", action="store_true")
     args = ap.parse_args()
 
-    repeats2, iters2 = (10, 40) if args.full else (3, 15)
-    repeats3, iters3 = (10, 30) if args.full else (5, 15)
-
-    print("# === Fig 3: modified mixed-variable Branin (minimize) ===")
-    from benchmarks import fig3_branin
-    t0 = time.time()
-    tr3 = fig3_branin.run(n_iters=iters3, repeats=repeats3)
-    for name, trace in tr3.items():
-        final = trace[:, -1].mean()
-        emit(f"fig3_branin_{name}", (time.time() - t0) / max(len(tr3), 1)
-             * 1e6 / repeats3, f"best_final={final:.3f}")
-    m_s = tr3["mango-serial"][:, -1].mean()
-    t_s = tr3["tpe-serial"][:, -1].mean()
-    m_p = tr3["mango-parallel"][:, -1].mean()
-    t_p = tr3["tpe-parallel"][:, -1].mean()
-    r_s = tr3["random-serial"][:, -1].mean()
-    print(f"# CLAIM fig3 'Mango outperforms Hyperopt in serial': "
-          f"{m_s:.3f} <= {t_s:.3f} -> {'PASS' if m_s <= t_s + 0.05 else 'FAIL'}")
-    print(f"# CLAIM fig3 'Mango outperforms Hyperopt in parallel': "
-          f"{m_p:.3f} <= {t_p:.3f} -> {'PASS' if m_p <= t_p + 0.05 else 'FAIL'}")
-    print(f"# CLAIM fig3 'BO beats random': {m_s:.3f} <= {r_s:.3f} -> "
-          f"{'PASS' if m_s <= r_s + 1e-9 else 'FAIL'}")
-
-    if not args.skip_fig2:
-        print("# === Fig 2: GBM-on-wine classifier tuning (maximize) ===")
-        from benchmarks import fig2_classifier
-        t0 = time.time()
-        tr2 = fig2_classifier.run(n_iters=iters2, repeats=repeats2)
-        for name, trace in tr2.items():
-            emit(f"fig2_wine_{name}", (time.time() - t0) / max(len(tr2), 1)
-                 * 1e6 / repeats2, f"best_acc={trace[:, -1].mean():.4f}")
-        ms = tr2["mango-serial"][:, -1].mean()
-        ts = tr2["tpe-serial"][:, -1].mean()
-        mp = tr2["mango-parallel"][:, -1].mean()
-        mc = tr2["mango-clustering"][:, -1].mean()
-        tp = tr2["tpe-parallel"][:, -1].mean()
-        rnd = tr2["random-parallel"][:, -1].mean()
-        print(f"# CLAIM fig2 'all BO >= random (within noise)': "
-              f"min(BO)={min(ms, mp, mc, tp):.4f} vs random={rnd:.4f} -> "
-              f"{'PASS' if min(ms, mp, mc, tp) >= rnd - 0.01 else 'FAIL'}")
-        print(f"# CLAIM fig2 'Mango serial slightly better than Hyperopt "
-              f"serial': {ms:.4f} vs {ts:.4f} -> "
-              f"{'PASS' if ms >= ts - 0.005 else 'FAIL'}")
-        print(f"# CLAIM fig2 'Mango parallel >= Hyperopt parallel "
-              f"(<=40 iters)': {max(mp, mc):.4f} vs {tp:.4f} -> "
-              f"{'PASS' if max(mp, mc) >= tp - 0.005 else 'FAIL'}")
+    # Figs. 2/3 now run through the unified Mango-vs-TPE harness
+    # (benchmarks/paper_figures.py) — claims logic lives there only.
+    from benchmarks.paper_figures import run_figures
+    grid = "full" if args.full else "default"
+    figs = ["fig3"] if args.skip_fig2 else ["fig3", "fig2"]
+    run_figures(figs, grid=grid)
 
     print("# === Batch-size scaling (hallucination strategy) ===")
     from benchmarks import batch_scaling

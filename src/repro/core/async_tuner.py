@@ -44,7 +44,8 @@ class AsyncTuner:
                  domain_size: Optional[float] = None,
                  early_stopping: Optional[Callable[[TunerResults], bool]]
                  = None,
-                 checkpoint_path: Optional[str] = None):
+                 checkpoint_path: Optional[str] = None,
+                 strategy_kwargs: Optional[Dict[str, Any]] = None):
         self.trial_fn = trial_fn
         # poll_interval only matters for submit-only schedulers without a
         # completion condition; everything in-repo wakes on wait_any
@@ -59,7 +60,8 @@ class AsyncTuner:
             param_space, optimizer=optimizer, seed=seed,
             domain_size=domain_size, mc_samples=mc_samples,
             fit_steps=fit_steps, use_pallas=use_pallas,
-            pallas_interpret=pallas_interpret, refit_every=refit_every)
+            pallas_interpret=pallas_interpret, refit_every=refit_every,
+            strategy_kwargs=strategy_kwargs)
         self.space = self.opt.space
         if checkpoint_path and Path(checkpoint_path).exists():
             self.load_state(checkpoint_path)

@@ -78,7 +78,8 @@ class AskTellOptimizer:
                  domain_size: Optional[float] = None,
                  mc_samples: Optional[int] = None, fit_steps: int = 40,
                  use_pallas: bool = False, pallas_interpret: bool = True,
-                 refit_every: int = 8):
+                 refit_every: int = 8,
+                 strategy_kwargs: Optional[Dict[str, Any]] = None):
         self.space = (param_space if isinstance(param_space, ParamSpace)
                       else ParamSpace(param_space))
         if optimizer not in STRATEGIES:
@@ -90,6 +91,10 @@ class AskTellOptimizer:
         self.use_pallas = use_pallas
         self.pallas_interpret = pallas_interpret
         self.refit_every = refit_every
+        # strategy-specific knobs (e.g. tpe's gamma/pending_penalty,
+        # clustering's top_frac) forwarded verbatim to the constructor —
+        # unknown keys raise TypeError there, so typos can't be dropped
+        self.strategy_kwargs = dict(strategy_kwargs or {})
         self.domain_size = domain_size or self.space.domain_size
         self.sign = sign                   # +1 maximize, -1 minimize
         self._rng = np.random.default_rng(seed)
@@ -139,7 +144,8 @@ class AskTellOptimizer:
                               fit_steps=self.fit_steps,
                               use_pallas=self.use_pallas,
                               pallas_interpret=self.pallas_interpret,
-                              refit_every=self.refit_every)
+                              refit_every=self.refit_every,
+                              **self.strategy_kwargs)
             gp = getattr(self._strat, "gp", None)
             if gp is not None and self._gp_snapshot is not None:
                 obs = self.observed_trials()

@@ -1,4 +1,5 @@
-"""Tree-structured Parzen Estimator baseline (the Hyperopt algorithm).
+"""Tree-structured Parzen Estimator baseline (the Hyperopt algorithm),
+device-resident.
 
 The paper's evaluation compares Mango against Hyperopt; hyperopt is not
 installable offline, so we reimplement its TPE core faithfully enough for
@@ -14,53 +15,217 @@ the comparison:
     no information-gain machinery, which is exactly the gap Mango's
     hallucination/clustering strategies target).
 
+As of ISSUE 4 the whole proposal is ONE jit'd device program per ask
+(``fused_tpe_propose``, mirroring ``gp.fused_propose_pallas_pending``): the
+good/bad split runs as masked ranks over the padded observation buffer, the
+O(m n d) product-Parzen scorer is either the pure-jnp oracle or the
+``kernels/tpe_kde`` Pallas kernel (``use_pallas=True``), and the batch is
+selected with ``lax.top_k`` — only the (batch_size,) pick indices leave the
+device.  The seed numpy loop is kept as ``propose_host``, the parity oracle.
+
+Pending trials: Hyperopt's parallelism is *naive* — in-flight trials are
+ignored, so an async replacement pick degenerates to re-proposing the
+current top-b.  ``pending_penalty=True`` (opt-in, off by default to keep
+baseline semantics) hallucinates the in-flight configurations into the
+*bad*-split KDE ("pessimistic liar"): g(x) rises around pending points, so
+replacement picks steer away from duplicating work already in flight.  The
+absorb is just one extra membership mask over the same buffer — still one
+device program per ask, no matter how many trials are outstanding.
+
 Registered as ``optimizer="tpe"`` so every Tuner feature (schedulers, fault
-tolerance, checkpointing) applies to the baseline too.
+tolerance, checkpointing) applies to the baseline too.  ``propose`` is
+stateless — it never mutates strategy or shared buffers, so concurrent
+drivers can share one instance.
 """
 from __future__ import annotations
 
+import functools
 from typing import List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategies import STRATEGIES, BaseStrategy
+from repro.kernels.tpe_kde.ops import pad_dims, pad_rows
+from repro.kernels.tpe_kde.ref import scott_bandwidth, tpe_scores_ref
+from repro.kernels.tpe_kde.tpe_kde import tpe_scores_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "batch_size", "d_true", "use_pallas", "interpret", "block_s"))
+def fused_tpe_propose(X, y, C, meta, *, batch_size: int, d_true: int,
+                      use_pallas: bool = False, interpret: bool = True,
+                      block_s: int = 256):
+    """One device program per ask: split -> l/g scoring -> ``lax.top_k``.
+
+    X (na, dp) is the padded buffer of observed rows followed by pending
+    rows (the penalty's in-flight set, empty unless enabled) and zero
+    padding, in that order; y (na,) carries the observed objective values.
+    C (Sp, dp) are the padded Monte-Carlo candidates.  ``meta`` packs the
+    four scalars [n_obs, n_pend, n_cand, gamma] as one f32 row — one
+    host->device transfer instead of six; every row mask is derived from it
+    in-program.  Returns the (batch_size,) pick indices.
+    """
+    n_obs = meta[0].astype(jnp.int32)
+    n_pend = meta[1].astype(jnp.int32)
+    n_cand = meta[2].astype(jnp.int32)
+    gamma = meta[3]
+    row = jnp.arange(X.shape[0], dtype=jnp.int32)
+    is_obs = row < n_obs
+    pend_mask = ((row >= n_obs) & (row < n_obs + n_pend)) \
+        .astype(jnp.float32)
+    # rank observed rows best-first (stable, like the host argsort)
+    neg = jnp.where(is_obs, -y, jnp.inf)
+    order = jnp.argsort(neg)
+    rank = jnp.zeros_like(row).at[order].set(row)
+    # split count in float32 on BOTH paths so ceil ties can't flip vs host
+    n_good = jnp.maximum(
+        1, jnp.ceil(gamma * n_obs.astype(jnp.float32))).astype(jnp.int32)
+    good = (rank < n_good) & is_obs
+    wg = good.astype(jnp.float32)
+    wb_obs = ((rank >= n_good) & is_obs).astype(jnp.float32)
+    wb_obs = jnp.where(n_obs > n_good, wb_obs, wg)   # empty bad -> good
+    wb = jnp.minimum(wb_obs + pend_mask, 1.0)        # pessimistic liar
+    ng = jnp.sum(wg)
+    nb = jnp.sum(wb)
+    bw_g = scott_bandwidth(ng, d_true)
+    bw_b = scott_bandwidth(nb, d_true)
+    # per-row bandwidth scale: gamma <= 0.5 keeps the splits disjoint, so
+    # each row carries its own split's 1/(2 bw^2) and one exp per
+    # (candidate, row, dim) feeds both densities
+    a_row = jnp.where(good, 0.5 / (bw_g * bw_g), 0.5 / (bw_b * bw_b))
+    scal = jnp.stack([1.0 / ng, 1.0 / nb, jnp.float32(0.0),
+                      jnp.float32(0.0)])[None, :]
+    if use_pallas:
+        score = tpe_scores_pallas(C, X, a_row, wg, wb, scal, d_true=d_true,
+                                  block_s=block_s, interpret=interpret)
+    else:
+        score = tpe_scores_ref(C, X, a_row, wg, wb, scal, d_true=d_true)
+    score = jnp.where(jnp.arange(C.shape[0]) < n_cand, score, -jnp.inf)
+    _, idx = jax.lax.top_k(score, batch_size)
+    return idx
 
 
 class TPEStrategy(BaseStrategy):
     needs_gp = True  # needs observations (not an actual GP)
 
     def __init__(self, dim: int, domain_size: float, gamma: float = 0.25,
-                 **kwargs):
-        self.dim = dim
-        self.gamma = gamma
+                 pending_penalty: bool = False, fit_steps: int = 40,
+                 use_pallas: bool = False, pallas_interpret: bool = True,
+                 refit_every: int = 8):
+        # fit_steps/refit_every belong to the standard strategy-constructor
+        # contract; TPE has no GP to apply them to, so they are accepted and
+        # unused.  Anything else is a typo -> TypeError, like the other
+        # strategies.
+        if dim < 1:
+            raise ValueError(f"TPE needs dim >= 1, got {dim}")
+        # gamma is the GOOD quantile; > 0.5 would make the "good" model the
+        # majority (nonsensical for TPE) and is what lets the fused program
+        # score both splits with one exp per row (disjoint splits)
+        if not 0.0 < gamma <= 0.5:
+            raise ValueError(f"gamma must be in (0, 0.5], got {gamma}")
+        if not domain_size > 0:
+            raise ValueError(f"domain_size must be > 0, got {domain_size}")
+        self.dim = int(dim)
+        self.domain_size = float(domain_size)
+        self.gamma = float(gamma)
+        self.pending_penalty = bool(pending_penalty)
+        self.use_pallas = bool(use_pallas)
+        self.pallas_interpret = bool(pallas_interpret)
+
+    # ------------------------------------------------------------ host oracle
+    def _split_count(self, n: int) -> int:
+        """Good-split size, computed in float32 like the device program."""
+        return max(1, int(np.ceil(np.float32(self.gamma) * np.float32(n))))
 
     @staticmethod
-    def _log_kde(pts: np.ndarray, x: np.ndarray) -> np.ndarray:
+    def _scott_bw(n_pts: int, d: int) -> np.float32:
+        """Scott-rule bandwidth, computed in float32 like the device."""
+        return max(np.float32(max(n_pts, 1)) ** np.float32(-1.0 / (d + 4)),
+                   np.float32(1e-2)) * np.float32(0.5) + np.float32(1e-3)
+
+    @staticmethod
+    def _kde_sum(pts: np.ndarray, x: np.ndarray, bw) -> np.ndarray:
+        """(m, d) per-dim SUM of Gaussian Parzen kernels of x under pts."""
+        inv2bw2 = np.float32(0.5) / np.float32(bw * bw)
+        d2 = (x[:, None, :] - pts[None, :, :]) ** 2     # (m, n, d)
+        return np.exp(-d2 * inv2bw2).sum(axis=1)
+
+    @classmethod
+    def _log_kde(cls, pts: np.ndarray, x: np.ndarray) -> np.ndarray:
         """1D-product Parzen log-density of x (m, d) under pts (n, d)."""
         n = max(len(pts), 1)
-        bw = max(n ** (-1.0 / (pts.shape[1] + 4)), 1e-2) * 0.5 + 1e-3
-        # (m, n, d) distances -> product over d of mean-over-n kernels
-        d2 = (x[:, None, :] - pts[None, :, :]) ** 2
-        k = np.exp(-0.5 * d2 / bw ** 2)  # (m, n, d)
-        dens = k.mean(axis=1) + 1e-12    # (m, d)
-        return np.log(dens).sum(axis=1)
+        dens = cls._kde_sum(pts, x, cls._scott_bw(n, pts.shape[1])) / n
+        return np.log(dens + 1e-12).sum(axis=1)
 
-    def propose(self, X, y, candidates, batch_size, seed=0,
-                pending=None) -> List[int]:
-        # TPE has no variance machinery to contract; pending trials are
-        # ignored (Hyperopt's naive parallelism, as documented above)
+    def propose_host(self, X, y, candidates, batch_size, seed=0,
+                     pending=None) -> List[int]:
+        """The seed numpy pipeline, kept as the parity oracle for the fused
+        device program (same split, per-split bandwidths, tie-breaking).
+
+        Pending rows (when the penalty is on) join the bad mixture at the
+        bad split's bandwidth.  In the degenerate empty-bad case — only
+        reachable with a single observation, the optimizer never asks with
+        fewer than two — the good rows stand in for the bad split at their
+        own bandwidth (exactly the device program's per-row-scale
+        semantics)."""
         y = np.asarray(y, dtype=float)
         n = len(y)
-        n_good = max(1, int(np.ceil(self.gamma * n)))
-        order = np.argsort(-y)  # maximization
-        good = np.asarray(X)[order[:n_good]]
-        bad = np.asarray(X)[order[n_good:]]
-        if len(bad) == 0:
-            bad = good
-        score = self._log_kde(good, candidates) - self._log_kde(bad,
-                                                                candidates)
-        top = np.argsort(-score)[:batch_size]
+        d = np.asarray(X).shape[1]
+        n_good = self._split_count(n)
+        order = np.argsort(-y, kind="stable")  # maximization
+        Xa = np.asarray(X)
+        good = Xa[order[:n_good]]
+        bad = Xa[order[n_good:]]
+        pend = (np.asarray(pending, dtype=Xa.dtype)
+                if (self.pending_penalty and pending is not None
+                    and len(pending)) else Xa[:0])
+        ng = len(good)
+        nb = (len(bad) if len(bad) else ng) + len(pend)
+        bw_g = self._scott_bw(ng, d)
+        bw_b = self._scott_bw(nb, d)
+        candidates = np.asarray(candidates)
+        batch_size = min(batch_size, len(candidates))
+        lg = np.log(self._kde_sum(good, candidates, bw_g) / ng
+                    + 1e-12).sum(axis=1)
+        bad_sum = (self._kde_sum(bad, candidates, bw_b) if len(bad)
+                   else self._kde_sum(good, candidates, bw_g))
+        if len(pend):
+            bad_sum = bad_sum + self._kde_sum(pend, candidates, bw_b)
+        lb = np.log(bad_sum / nb + 1e-12).sum(axis=1)
+        top = np.argsort(-(lg - lb), kind="stable")[:batch_size]
         return [int(i) for i in top]
+
+    # --------------------------------------------------------- device program
+    def propose(self, X, y, candidates, batch_size, seed=0,
+                pending=None) -> List[int]:
+        X = np.asarray(X, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float32)
+        C = np.ascontiguousarray(candidates, dtype=np.float32)
+        n, d = X.shape
+        S = len(C)
+        batch_size = min(batch_size, S)
+        n_pend = (len(pending)
+                  if self.pending_penalty and pending is not None else 0)
+        dp = pad_dims(d)
+        # pad rows/candidates to stable multiples: a handful of jit cache
+        # entries over a whole run, not one per observation count
+        na = pad_rows(n + n_pend, 64)
+        Sp = pad_rows(S, 256)
+        Xb = np.zeros((na, dp), np.float32)
+        Xb[:n, :d] = X
+        yb = np.zeros(na, np.float32)
+        yb[:n] = y
+        if n_pend:
+            Xb[n:n + n_pend, :d] = np.asarray(pending, dtype=np.float32)
+        Cb = np.zeros((Sp, dp), np.float32)
+        Cb[:S, :d] = C
+        meta = np.array([n, n_pend, S, self.gamma], np.float32)
+        picks = fused_tpe_propose(
+            Xb, yb, Cb, meta, batch_size=batch_size, d_true=d,
+            use_pallas=self.use_pallas, interpret=self.pallas_interpret)
+        return [int(i) for i in np.asarray(picks)]
 
 
 STRATEGIES["tpe"] = TPEStrategy

@@ -22,7 +22,11 @@ Config keys (mirroring Mango's ``conf_dict``):
   in between, observations extend the Cholesky incrementally in O(n^2)),
   scheduler (None; any ``repro.scheduler`` Scheduler — then ``objective``
   is a *per-trial* callable and the scheduler wraps it into the batch
-  objective, so ``Tuner`` and ``AsyncTuner`` take the same inputs).
+  objective, so ``Tuner`` and ``AsyncTuner`` take the same inputs),
+  strategy_kwargs (None; dict of strategy-specific knobs forwarded to the
+  strategy constructor — e.g. ``{"gamma": 0.2}`` or
+  ``{"pending_penalty": True}`` for ``optimizer="tpe"``, ``{"top_frac":
+  0.1}`` for ``clustering``; unknown keys raise TypeError).
 """
 from __future__ import annotations
 
@@ -37,7 +41,7 @@ DEFAULTS = dict(batch_size=1, num_iteration=20, initial_random=2,
                 optimizer="bayesian", domain_size=None, mc_samples=None,
                 seed=0, early_stopping=None, checkpoint_path=None,
                 fit_steps=40, use_pallas=False, pallas_interpret=True,
-                refit_every=8, scheduler=None)
+                refit_every=8, scheduler=None, strategy_kwargs=None)
 
 
 @dataclasses.dataclass
@@ -79,7 +83,8 @@ class Tuner:
             fit_steps=self.conf["fit_steps"],
             use_pallas=self.conf["use_pallas"],
             pallas_interpret=self.conf["pallas_interpret"],
-            refit_every=self.conf["refit_every"])
+            refit_every=self.conf["refit_every"],
+            strategy_kwargs=self.conf["strategy_kwargs"])
         self.space = self.opt.space
         self._iteration = 0
         ckpt = self.conf["checkpoint_path"]

@@ -98,3 +98,72 @@ def test_clustering_device_batch1_is_ucb_argmax():
     dev = ClusteringStrategy(2, 1e4, fit_steps=15)
     h = HallucinationStrategy(2, 1e4, fit_steps=15)
     assert dev.propose(X, y, C, 1)[0] == h.propose(X, y, C, 1)[0]
+
+
+# --------------------------------------------------------- device-resident TPE
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n_cand", [300, 600])
+def test_tpe_pick_parity_three_way(seed, n_cand):
+    """host numpy oracle == jit'd jnp path == Pallas-interpret path: the
+    fused split -> l/g scoring -> top_k program must select the host's
+    candidates on noise-floored surfaces."""
+    from repro.core.tpe import TPEStrategy
+
+    X, y, C, _ = _data(seed=seed, n_cand=n_cand)
+    picks = TPEStrategy(2, 1e4).propose_host(X, y, C, 4)
+    assert TPEStrategy(2, 1e4).propose(X, y, C, 4) == picks
+    assert TPEStrategy(2, 1e4, use_pallas=True).propose(X, y, C, 4) == picks
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_tpe_pending_penalty_parity_three_way(seed):
+    """With the opt-in pending penalty, the in-flight rows join the
+    bad-split KDE in-program; all three paths must still agree."""
+    from repro.core.tpe import TPEStrategy
+
+    X, y, C, P = _data(seed=seed, n_cand=300)
+    kw = dict(pending_penalty=True)
+    picks = TPEStrategy(2, 1e4, **kw).propose_host(X, y, C, 4, pending=P)
+    assert TPEStrategy(2, 1e4, **kw).propose(X, y, C, 4, pending=P) == picks
+    assert TPEStrategy(2, 1e4, use_pallas=True,
+                       **kw).propose(X, y, C, 4, pending=P) == picks
+
+
+def test_tpe_naive_parallelism_ignores_pending():
+    """Default (Hyperopt) semantics: pending trials must not change the
+    picks — the documented naive-parallelism baseline behavior."""
+    from repro.core.tpe import TPEStrategy
+
+    X, y, C, P = _data(seed=1, n_cand=400)
+    s = TPEStrategy(2, 1e4)
+    assert s.propose(X, y, C, 4) == s.propose(X, y, C, 4, pending=P)
+
+
+def test_tpe_pending_penalty_breaks_topb_duplication():
+    """An async replacement pick with the previous pick still in flight:
+    naive TPE re-proposes the same candidate (top-b duplication); with
+    ``pending_penalty`` the bad-split KDE rises around the pending point
+    and the replacement pick moves elsewhere."""
+    from repro.core.tpe import TPEStrategy
+
+    X, y, C, _ = _data(seed=1, n_cand=400)
+    naive = TPEStrategy(2, 1e4)
+    first = naive.propose(X, y, C, 1)
+    assert naive.propose(X, y, C, 1, pending=C[first]) == first
+    pen = TPEStrategy(2, 1e4, pending_penalty=True)
+    second = pen.propose(X, y, C, 1, pending=C[first])
+    assert second != first
+
+
+def test_tpe_batch_valid_unique_and_clamped():
+    from repro.core.tpe import TPEStrategy
+
+    X, y, C, _ = _data(seed=5, n_cand=300)
+    s = TPEStrategy(2, 1e4)
+    picks = s.propose(X, y, C, 6)
+    assert len(set(picks)) == 6
+    assert all(0 <= p < len(C) for p in picks)
+    # batch_size > n_candidates degrades to the whole candidate set
+    tiny = C[:3]
+    assert sorted(s.propose(X, y, tiny, 8)) == [0, 1, 2] == \
+        sorted(s.propose_host(X, y, tiny, 8))

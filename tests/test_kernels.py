@@ -16,6 +16,9 @@ from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 from repro.kernels.ssm_scan.ssm_scan import ssm_scan
+from repro.kernels.tpe_kde.ops import parzen_logdens
+from repro.kernels.tpe_kde.ref import tpe_scores_ref
+from repro.kernels.tpe_kde.tpe_kde import tpe_scores_pallas
 
 KEY = jax.random.PRNGKey(0)
 
@@ -174,3 +177,44 @@ def test_gp_var_downdate_kernel_matches_extended_system():
     t = kC_ext @ np.linalg.inv(K_ext)
     sig2_scratch = np.maximum(var + noise - np.sum(t * kC_ext, -1), 1e-10)
     np.testing.assert_allclose(np.asarray(sig2_dd), sig2_scratch, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,n,d", [(500, 20, 2), (300, 64, 5), (257, 33, 11)])
+def test_tpe_parzen_logdens_matches_host_oracle(m, n, d):
+    """The padded Pallas product-Parzen log-density == TPEStrategy's numpy
+    ``_log_kde`` (same Scott bandwidth, same eps floor)."""
+    from repro.core.tpe import TPEStrategy
+
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(size=(n, d)).astype(np.float32)
+    cands = rng.uniform(size=(m, d)).astype(np.float32)
+    out = parzen_logdens(cands, pts)
+    host = TPEStrategy._log_kde(pts, cands)
+    np.testing.assert_allclose(out, host, atol=1e-4)
+
+
+@pytest.mark.parametrize("S,n,d_true", [(512, 64, 4), (256, 24, 8)])
+def test_tpe_score_kernel_matches_ref(S, n, d_true):
+    """Fused two-split score kernel == the pure-jnp oracle on padded
+    buffers with masked-out rows in both splits."""
+    rng = np.random.default_rng(3)
+    dp = 8 if d_true <= 8 else 16
+    C = np.zeros((S, dp), np.float32)
+    C[:, :d_true] = rng.uniform(size=(S, d_true))
+    X = np.zeros((n, dp), np.float32)
+    X[: n - 4, :d_true] = rng.uniform(size=(n - 4, d_true))  # 4 padded rows
+    wg = np.zeros(n, np.float32)
+    wb = np.zeros(n, np.float32)
+    wg[: (n - 4) // 4] = 1.0
+    wb[(n - 4) // 4: n - 4] = 1.0
+    a_row = np.where(wg > 0, np.float32(3.1), np.float32(5.7))
+    scal = np.array([[1.0 / wg.sum(), 1.0 / wb.sum(), 0.0, 0.0]],
+                    np.float32)
+    out = tpe_scores_pallas(jnp.asarray(C), jnp.asarray(X),
+                            jnp.asarray(a_row), jnp.asarray(wg),
+                            jnp.asarray(wb), jnp.asarray(scal),
+                            d_true=d_true, block_s=256)
+    ref = tpe_scores_ref(jnp.asarray(C), jnp.asarray(X),
+                         jnp.asarray(a_row), jnp.asarray(wg),
+                         jnp.asarray(wb), jnp.asarray(scal), d_true=d_true)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

@@ -326,3 +326,104 @@ def test_condition_wait_wakes_on_completion():
     done = sched.wait_any([h], timeout=5.0)
     assert done == [h] and h.result == 1.0
     sched.shutdown()
+
+
+# --------------------------------------------------- TPE through the core
+def test_tpe_sync_kill_resume_replays_proposals(tmp_path):
+    """TPE (no GP: ledger + RNG only) through the sync driver's checkpoint:
+    a run stopped at iteration 3 resumes to the exact proposals of an
+    uninterrupted one."""
+    conf = dict(optimizer="tpe", num_iteration=6, batch_size=2, seed=5,
+                **FAST)
+    objective = lambda b: ([quad(p) for p in b], list(b))  # noqa: E731
+    full = Tuner(SPACE, objective, conf).maximize()
+
+    ckpt = tmp_path / "tpe_sync.json"
+    conf_i = {**conf, "checkpoint_path": str(ckpt), "num_iteration": 3}
+    Tuner(SPACE, objective, conf_i).maximize()
+    resumed = Tuner(SPACE, objective,
+                    {**conf_i, "num_iteration": 6}).maximize()
+    assert [(p["x"], p["y"]) for p in resumed.params_tried] == \
+        [(p["x"], p["y"]) for p in full.params_tried]
+
+
+def test_tpe_async_kill_resume_replays_proposals(tmp_path):
+    """Same guarantee through the async driver, with in-flight TPE trials
+    serialized in the ledger and re-dispatched on resume."""
+    kw = dict(optimizer="tpe", num_evals=10, batch_size=2,
+              initial_random=2, seed=7, **FAST)
+    full = AsyncTuner(SPACE, quad, InlineScheduler(), **kw).maximize()
+
+    ckpt = tmp_path / "tpe_async.json"
+    stopped = AsyncTuner(SPACE, quad, InlineScheduler(),
+                         checkpoint_path=str(ckpt),
+                         early_stopping=lambda r: r.iterations >= 5,
+                         **kw).maximize()
+    assert stopped.iterations == 5
+    resumed = AsyncTuner(SPACE, quad, InlineScheduler(),
+                         checkpoint_path=str(ckpt), **kw).maximize()
+    assert [(p["x"], p["y"]) for p in resumed.params_tried] == \
+        [(p["x"], p["y"]) for p in full.params_tried]
+    assert resumed.objective_values == full.objective_values
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_tpe_ask_is_single_device_program(monkeypatch, use_pallas):
+    """Every TPE ask — pending trials included — must dispatch exactly one
+    fused device program and never fall back to the host numpy KDE."""
+    import repro.core.tpe as tpe_mod
+
+    calls = {"fused": 0}
+    orig = tpe_mod.fused_tpe_propose
+
+    def counting(*a, **k):
+        calls["fused"] += 1
+        return orig(*a, **k)
+
+    def boom(*a, **k):
+        raise AssertionError("host numpy KDE path was used")
+
+    monkeypatch.setattr(tpe_mod, "fused_tpe_propose", counting)
+    monkeypatch.setattr(tpe_mod.TPEStrategy, "_log_kde", boom)
+    monkeypatch.setattr(tpe_mod.TPEStrategy, "propose_host", boom)
+
+    opt = AskTellOptimizer(
+        SPACE, optimizer="tpe", seed=0, use_pallas=use_pallas,
+        strategy_kwargs={"pending_penalty": True}, **FAST)
+    for t in opt.ask(4):               # random phase (no model yet)
+        opt.tell(t.id, quad(t.params))
+    assert calls["fused"] == 0
+    opt.ask(3)                         # no pending
+    assert calls["fused"] == 1
+    opt.ask(2)                         # 3 pending, absorbed in-program
+    assert calls["fused"] == 2
+
+
+def test_strategy_kwargs_forwarded_and_validated():
+    """The core forwards strategy_kwargs verbatim; unknown keys surface as
+    TypeError at first ask (the old TPEStrategy silently swallowed them)."""
+    opt = AskTellOptimizer(SPACE, optimizer="tpe", seed=0,
+                           strategy_kwargs={"gamma": 0.5}, **FAST)
+    for t in opt.ask(2):
+        opt.tell(t.id, quad(t.params))
+    opt.ask(1)
+    assert opt._strat.gamma == 0.5
+    assert opt._strat.domain_size == opt.domain_size   # no longer dropped
+
+    bad = AskTellOptimizer(SPACE, optimizer="tpe", seed=0,
+                           strategy_kwargs={"gamme": 0.5}, **FAST)
+    with pytest.raises(TypeError):   # strategy built on the first ask
+        bad.ask(1)
+
+
+def test_tpe_gamma_validation():
+    from repro.core.tpe import TPEStrategy
+    with pytest.raises(ValueError):
+        TPEStrategy(2, 1e4, gamma=0.0)
+    with pytest.raises(ValueError):
+        TPEStrategy(2, 1e4, gamma=0.6)   # good quantile capped at 0.5:
+    with pytest.raises(ValueError):      # disjoint splits -> one exp/row
+        TPEStrategy(2, 1e4, gamma=1.0)
+    with pytest.raises(ValueError):
+        TPEStrategy(0, 1e4)
+    TPEStrategy(2, 1e4, gamma=0.5)       # boundary is valid
