@@ -12,7 +12,11 @@ Pyzer-Knapp 2018) whole pipeline as one jit'd device program: pending-trial
 absorb -> posterior + UCB -> ``jax.lax.top_k`` -> weighted k-means
 (``kmeans._kmeans``) -> per-cluster argmax.  Only the ``(batch_size,)``
 pick indices ever leave the device — the (n_mc,) acquisition surface and
-the top-quantile slice stay on it.
+the top-quantile slice stay on it.  Scoring and pending absorption run
+through ``core.scoring`` — the same conditioning-hardened core (and, with
+``use_pallas``, the same ``gp_acquisition`` kernels) as
+``gp.fused_propose_pallas_pending``, so there is exactly one GP scoring
+backend in the tree.
 """
 from __future__ import annotations
 
@@ -39,21 +43,30 @@ def ucb(mu: np.ndarray, sigma: np.ndarray, beta: float) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("batch_size", "n_top",
-                                             "pend_cap"))
+                                             "pend_cap", "use_pallas",
+                                             "block_s", "interpret"))
 def fused_cluster_propose(X: jax.Array, y: jax.Array, mask: jax.Array,
-                          L: jax.Array, P: jax.Array, n_pending: jax.Array,
+                          L: jax.Array, Linv: jax.Array, P: jax.Array,
+                          n_pending: jax.Array,
                           C: jax.Array, ls, var, noise, n_obs: jax.Array,
                           domain_size: jax.Array, key,
                           batch_size: int, n_top: int,
-                          pend_cap: int) -> jax.Array:
+                          pend_cap: int, use_pallas: bool = False,
+                          block_s: int = 256,
+                          interpret: bool = True) -> jax.Array:
     """Device-resident clustering batch proposal: one program per ask.
 
-    1. Absorb the (padded, ``pend_cap``) pending buffer exactly the way the
-       host loop does — posterior mean at each in-flight point, rank-1
-       Cholesky hallucination (GP-BUCB semantics).
-    2. Posterior + adaptive-beta UCB over all candidates (standardized y
-       space; the de-standardized surface differs by a positive affine map,
-       so top-k and argmax are identical).
+    1. Absorb the (padded, ``pend_cap``) pending buffer through the shared
+       core's hardened absorb loop (``scoring.absorb_pending``) — posterior
+       mean at each in-flight point, rank-1 (L, Linv) factor append
+       (GP-BUCB semantics), exactly the loop the fused Pallas proposal
+       runs.
+    2. Posterior + adaptive-beta UCB over all candidates through the one
+       shared scorer (``scoring.posterior_scores`` — the Pallas
+       ``gp_acquisition`` kernel when ``use_pallas``, its jnp twin
+       otherwise; standardized y space — the de-standardized surface
+       differs by a positive affine map, so top-k and argmax are
+       identical).
     3. ``jax.lax.top_k`` keeps the ``n_top`` best; their scores (shifted to
        positive) weight the k-means.
     4. Weighted k-means (k-means++ seeding + Lloyd, ``kmeans._kmeans``)
@@ -64,31 +77,22 @@ def fused_cluster_propose(X: jax.Array, y: jax.Array, mask: jax.Array,
        the batch is unique by construction (the host implementation's
        post-hoc dedupe could silently collapse spatial diversity).
     """
-    from repro.core import gp as gp_lib
+    from repro.core import scoring
 
-    def absorb(j, carry):
-        def do(c):
-            X, y, mask, L = c
-            x_new = P[j]
-            k_vec = gp_lib.matern52(X, x_new[None, :], ls, var)[:, 0] * mask
-            mu = k_vec @ jax.scipy.linalg.cho_solve((L, True), y * mask)
-            slot = (n_obs + j).astype(jnp.int32)
-            L2, X2, mask2 = gp_lib.chol_append(L, X, mask, slot, x_new,
-                                               ls, var, noise)
-            return X2, y.at[slot].set(mu), mask2, L2
-        return jax.lax.cond(j < n_pending, do, lambda c: c, carry)
+    S = C.shape[0]
+    Xs, Cs = scoring.prescale(X, C, ls, block_s)
+    dp = Xs.shape[1]
+    d = X.shape[1]
+    Ps = jnp.zeros((pend_cap, dp), jnp.float32).at[:, :d].set(P / ls)
+    Xs, y, mask, L, Linv = scoring.absorb_pending(
+        Xs, y, mask, L, Linv, Ps, n_pending, n_obs, var, noise, pend_cap)
 
-    carry = (X.astype(jnp.float32), y.astype(jnp.float32),
-             mask.astype(jnp.float32), L)
-    X, y, mask, L = jax.lax.fori_loop(0, pend_cap, absorb, carry)
-
-    Ks = gp_lib.matern52(X, C, ls, var) * mask[:, None]         # (n, S)
-    alpha = jax.scipy.linalg.cho_solve((L, True), y * mask)
-    mu = Ks.T @ alpha
-    V = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
-    sig2 = jnp.maximum(var + noise - jnp.sum(V * V, axis=0), 1e-10)
-    beta = gp_lib.adaptive_beta_dev(n_obs + n_pending, domain_size)
+    mu, sig2, _, _ = scoring.posterior_scores(
+        Cs, Xs, y, mask, Linv, var, noise, use_pallas=use_pallas,
+        block_s=block_s, interpret=interpret)
+    beta = scoring.adaptive_beta_dev(n_obs + n_pending, domain_size)
     acq = mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
+    acq = jnp.where(jnp.arange(Cs.shape[0]) < S, acq, -jnp.inf)
 
     top_vals, top_idx = jax.lax.top_k(acq, n_top)
     w = top_vals - top_vals[n_top - 1] + 1e-6

@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-JITTER = 1e-6
+from repro.core import scoring
+from repro.core.scoring import (JITTER, adaptive_beta_dev,  # noqa: F401
+                                jitter as _jitter, linv_from_chol,
+                                schur_floor as _schur_floor)
 
 
 # --------------------------------------------------------------------------- #
@@ -51,7 +54,7 @@ def _masked_kernel(X: jax.Array, mask: jax.Array, ls, var, noise):
     K = matern52(X, X, ls, var)
     m2 = mask[:, None] * mask[None, :]
     K = K * m2
-    diag = jnp.where(mask > 0, var + noise + JITTER, 1.0)
+    diag = jnp.where(mask > 0, var + noise + _jitter(var), 1.0)
     return K.at[jnp.diag_indices(X.shape[0])].set(diag)
 
 
@@ -144,8 +147,9 @@ def chol_append(L: jax.Array, X: jax.Array, mask: jax.Array, idx: jax.Array,
     k_vec = (matern52(X, x_new[None, :], ls, var)[:, 0] * mask)  # (n,)
     l_vec = jax.scipy.linalg.solve_triangular(L, k_vec, lower=True)
     l_vec = jnp.where(jnp.arange(n) < idx, l_vec, 0.0)
-    l_nn = jnp.sqrt(jnp.maximum(var + noise + JITTER
-                                - jnp.sum(l_vec * l_vec), 1e-10))
+    l_nn = jnp.sqrt(jnp.maximum(var + noise + _jitter(var)
+                                - jnp.sum(l_vec * l_vec),
+                                _schur_floor(var, noise)))
     row = l_vec.at[idx].set(l_nn)
     L = L.at[idx, :].set(row)
     mask = mask.at[idx].set(1.0)
@@ -154,57 +158,58 @@ def chol_append(L: jax.Array, X: jax.Array, mask: jax.Array, idx: jax.Array,
 
 @jax.jit
 def kinv_from_chol(L: jax.Array) -> jax.Array:
-    """K^{-1} from its Cholesky (identity rows/cols at padded slots)."""
+    """K^{-1} from its Cholesky (identity rows/cols at padded slots).
+
+    Legacy: the live scoring core tracks ``Linv = L^{-1}`` instead
+    (``scoring.linv_from_chol``); this survives as the float32-Schur
+    baseline for the ``kinv_f32/f64`` benchmark rows and kernel tests.
+    """
     return jax.scipy.linalg.cho_solve(
         (L, True), jnp.eye(L.shape[0], dtype=L.dtype))
 
 
 @jax.jit
-def chol_kinv_append(L: jax.Array, Kinv: jax.Array, X: jax.Array,
-                     mask: jax.Array, idx: jax.Array, x_new: jax.Array,
-                     ls, var, noise
-                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """``chol_append`` + the Schur extension of K^{-1} in one program.
+def chol_factor_append(L: jax.Array, Linv: jax.Array, X: jax.Array,
+                       mask: jax.Array, idx: jax.Array, x_new: jax.Array,
+                       ls, var, noise
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """``chol_append`` + the rank-1 extension of Linv in one program.
 
-    Shares the Matern column and the forward solve between the two updates
-    (the Schur vector is u = K^{-1}k = L^{-T}(L^{-1}k)), halving the
-    per-observation cost of the track_kinv append path.  The L update
-    replicates ``chol_append``'s op sequence exactly.  Inactive rows/cols of
-    Kinv are identity, so ``u`` vanishes there and the update touches only
-    the active block plus the new row/col.
+    The track_factor append path: shares the Matern column and the forward
+    solve between the L row and the Linv row through the hardened
+    ``scoring.factor_append`` (float64 Schur accumulation when x64 is
+    enabled, one iterative-refinement step otherwise).
     """
     X = X.at[idx].set(x_new)
     k_vec = matern52(X, x_new[None, :], ls, var)[:, 0] * mask   # (n,)
-    L, Kinv = _append_core(L, Kinv, idx, k_vec, var, noise)
+    L, Linv, _, _ = scoring.factor_append(L, Linv, idx, k_vec, var, noise)
     mask = mask.at[idx].set(1.0)
-    return L, Kinv, X, mask
-
-
-def _append_core(L: jax.Array, Kinv: jax.Array, idx: jax.Array,
-                 k_vec: jax.Array, var, noise
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Rank-1 L/K^{-1} extension from a precomputed masked Matern column."""
-    L, Kinv, _, _ = _append_core_uv(L, Kinv, idx, k_vec, var, noise)
-    return L, Kinv
+    return L, Linv, X, mask
 
 
 def _append_core_uv(L: jax.Array, Kinv: jax.Array, idx: jax.Array,
                     k_vec: jax.Array, var, noise
                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """``_append_core`` that also hands back the Schur pair (u, schur).
+    """Legacy float32 K^{-1} Schur append (L row + block-inverse extension).
 
-    The fused Pallas slot loop feeds them straight into the rank-1 variance
-    downdate kernel — the same u/schur the K^{-1} extension consumes define
-    the per-candidate variance contraction of the extended system.
+    This is the PR-3 path whose conditioning loses picks on near-noiseless
+    objectives: the full-matrix rewrite ``Kinv += uuᵀ/schur`` compounds
+    float32 error every slot, and downstream scoring pays the cancelling
+    ``k(K⁻¹k)`` quadratic form.  Kept (not wired into any strategy) as the
+    baseline the ``kinv_f32_schur_*`` benchmark rows measure the hardened
+    ``scoring.factor_append`` against.
     """
     n = L.shape[0]
     l_vec = jax.scipy.linalg.solve_triangular(L, k_vec, lower=True)
     u = jax.scipy.linalg.solve_triangular(L, l_vec, trans=1, lower=True)
-    schur = jnp.maximum(var + noise + JITTER - k_vec @ u, 1e-10)
+    schur = jnp.maximum(var + noise + _jitter(var) - k_vec @ u,
+                        _schur_floor(var, noise))
     Kinv = _schur_extend(Kinv, u, schur, idx)
     l_vec = jnp.where(jnp.arange(n) < idx, l_vec, 0.0)
-    l_nn = jnp.sqrt(jnp.maximum(var + noise + JITTER
-                                - jnp.sum(l_vec * l_vec), 1e-10))
+    l_nn = jnp.sqrt(jnp.maximum(var + noise + _jitter(var)
+                                - jnp.sum(l_vec * l_vec),
+                                _schur_floor(var, noise)))
     L = L.at[idx, :].set(l_vec.at[idx].set(l_nn))
     return L, Kinv, u, schur
 
@@ -221,14 +226,6 @@ def _schur_extend(Kinv: jax.Array, u: jax.Array, schur: jax.Array,
 # --------------------------------------------------------------------------- #
 # Fused device-resident GP-BUCB batch proposal
 # --------------------------------------------------------------------------- #
-def adaptive_beta_dev(t: jax.Array, domain_size: jax.Array) -> jax.Array:
-    """jnp twin of ``acquisition.adaptive_beta`` (delta=0.1), trace-safe."""
-    t = jnp.maximum(t.astype(jnp.float32), 1.0)
-    beta = 2.0 * jnp.log(jnp.maximum(domain_size, 2.0) * t * t
-                         * (jnp.pi ** 2) / 0.6)
-    return jnp.clip(beta, 1.0, 100.0)
-
-
 def _fused_pick(X: jax.Array, y: jax.Array, mask: jax.Array, L: jax.Array,
                 C: jax.Array, ls, var, noise, n_obs: jax.Array,
                 domain_size: jax.Array, batch_size: int) -> jax.Array:
@@ -341,147 +338,67 @@ def fused_propose_pending(X: jax.Array, y: jax.Array, mask: jax.Array,
                        n_obs + n_pending, domain_size, batch_size)
 
 
-def _pallas_prescale(X, C, ls, block_s):
-    """Zero-pad d to a lane multiple and S to a block multiple, pre-divided
-    by the ARD lengthscales (padded columns contribute 0 to distances)."""
-    n, d = X.shape
-    S = C.shape[0]
-    dp = max(8, -(-d // 8) * 8)
-    Sp = -(-S // block_s) * block_s
-    Xs = jnp.zeros((n, dp), jnp.float32).at[:, :d].set(X / ls)
-    Cs = jnp.zeros((Sp, dp), jnp.float32).at[:S, :d].set(C / ls)
-    return Xs, Cs
-
-
-def _pallas_pick_downdate(Xs: jax.Array, y: jax.Array, mask: jax.Array,
-                          L: jax.Array, Kinv: jax.Array, Cs: jax.Array,
-                          S: int, var, noise, n_obs: jax.Array,
-                          domain_size: jax.Array, batch_size: int,
-                          block_s: int, interpret: bool) -> jax.Array:
-    """GP-BUCB slot loop on the Pallas scorer with O(n S) per-slot rescores.
-
-    One ``score_cov_pallas`` pass scores every candidate *and* caches the
-    masked cross-covariance block k(C, X).  Hallucinating at the posterior
-    mean leaves the mean invariant, so per slot only the variance moves:
-    the ``var_downdate_pallas`` kernel contracts it by ``(k(c, x*) -
-    k_c^T u)^2 / schur`` from the cached block — O(n S) — instead of
-    re-running the O(n^2 S) ``k @ Kinv`` quadratic form per slot.  The
-    cached block gains the picked point's column each slot, so later
-    downdates see the full extended system.
-    """
-    from repro.kernels.gp_acquisition.gp_acquisition import (
-        score_cov_pallas, var_downdate_pallas)
-
-    Sp = Cs.shape[0]
-    alpha = Kinv @ (y * mask)
-    mu, sig2, Kc = score_cov_pallas(Cs, Xs, mask, Kinv, alpha, var, noise,
-                                    block_s=block_s, interpret=interpret)
-
-    def pick(b, sig2, avail, picks):
-        beta = adaptive_beta_dev(n_obs + b, domain_size)
-        acq = mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
-        acq = jnp.where(avail, acq, -jnp.inf)
-        idx = jnp.argmax(acq).astype(jnp.int32)
-        return idx, picks.at[b].set(idx), avail.at[idx].set(False)
-
-    def body(b, carry):
-        L, Kinv, Kc, sig2, avail, picks = carry
-        idx, picks, avail = pick(b, sig2, avail, picks)
-        slot = (n_obs + b).astype(jnp.int32)
-        # the cached row IS the masked Matern column of the picked point
-        # (columns of not-yet-active slots are zero by construction)
-        k_vec = Kc[idx]
-        L, Kinv, u, schur = _append_core_uv(L, Kinv, slot, k_vec, var,
-                                            noise)
-        sig2, k_new = var_downdate_pallas(Cs, Cs[idx], Kc, u, schur, sig2,
-                                          var, block_s=block_s,
-                                          interpret=interpret)
-        Kc = Kc.at[:, slot].set(k_new)
-        return L, Kinv, Kc, sig2, avail, picks
-
-    carry = (L, Kinv.astype(jnp.float32), Kc, sig2,
-             jnp.arange(Sp) < S, jnp.zeros((batch_size,), jnp.int32))
-    carry = jax.lax.fori_loop(0, batch_size - 1, body, carry)
-    _, _, _, sig2, avail, picks = carry
-    _, picks, _ = pick(jnp.int32(batch_size - 1), sig2, avail, picks)
-    return picks
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("batch_size", "block_s", "interpret"))
+@functools.partial(jax.jit, static_argnames=("batch_size", "block_s",
+                                             "interpret", "use_pallas"))
 def fused_propose_pallas(X: jax.Array, y: jax.Array, mask: jax.Array,
-                         L: jax.Array, Kinv: jax.Array, C: jax.Array,
+                         L: jax.Array, Linv: jax.Array, C: jax.Array,
                          ls, var, noise, n_obs: jax.Array,
                          domain_size: jax.Array, batch_size: int,
-                         block_s: int = 256,
-                         interpret: bool = True) -> jax.Array:
-    """``fused_propose`` with the Pallas scorer and in-kernel downdates.
+                         block_s: int = 256, interpret: bool = True,
+                         use_pallas: bool = True) -> jax.Array:
+    """``fused_propose`` on the shared conditioning-hardened scoring core.
 
-    Scoring runs through ``kernels/gp_acquisition`` (fused Matern + posterior
-    epilogue on the MXU/VPU), which consumes K^{-1}; the hallucination
-    extends both L (rank-1 append) and K^{-1} (Schur complement) in O(n^2).
-    The Schur vector u = K^{-1}k comes from two triangular solves against L
-    rather than ``Kinv @ k`` — an order of magnitude tighter in float32 when
-    K is ill-conditioned — and the same (u, schur) pair drives the rank-1
-    variance downdate kernel, so per-slot rescoring is O(n S), not O(n^2 S).
+    Scoring runs through ``scoring.posterior_scores`` — the
+    ``kernels/gp_acquisition`` Pallas kernels when ``use_pallas`` (fused
+    Matern + posterior epilogue on the MXU/VPU) or their jnp oracle twin
+    otherwise (the "K⁻¹-jit" parity path) — which consumes the triangular
+    inverse factor Linv and evaluates variance as a monotone sum of
+    squares.  Hallucination extends (L, Linv) via the hardened
+    ``scoring.factor_append``; the same (u, schur) pair drives the rank-1
+    variance downdate, so per-slot rescoring is O(n S), not O(n^2 S).
     """
     S = C.shape[0]
-    Xs, Cs = _pallas_prescale(X, C, ls, block_s)
-    return _pallas_pick_downdate(Xs, y.astype(jnp.float32),
-                                 mask.astype(jnp.float32), L, Kinv, Cs, S,
-                                 var, noise, n_obs, domain_size, batch_size,
-                                 block_s, interpret)
+    Xs, Cs = scoring.prescale(X, C, ls, block_s)
+    return scoring.pick_downdate_loop(
+        Cs, Xs, S, y.astype(jnp.float32), mask.astype(jnp.float32), L,
+        Linv, var, noise, n_obs, domain_size, batch_size,
+        use_pallas=use_pallas, block_s=block_s, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("batch_size", "pend_cap",
-                                             "block_s", "interpret"))
+                                             "block_s", "interpret",
+                                             "use_pallas"))
 def fused_propose_pallas_pending(X: jax.Array, y: jax.Array,
                                  mask: jax.Array, L: jax.Array,
-                                 Kinv: jax.Array, P: jax.Array,
+                                 Linv: jax.Array, P: jax.Array,
                                  n_pending: jax.Array, C: jax.Array,
                                  ls, var, noise, n_obs: jax.Array,
                                  domain_size: jax.Array, batch_size: int,
                                  pend_cap: int, block_s: int = 256,
-                                 interpret: bool = True) -> jax.Array:
+                                 interpret: bool = True,
+                                 use_pallas: bool = True) -> jax.Array:
     """``fused_propose_pallas`` with in-flight trials absorbed *inside* the
-    program (the async replacement-pick hot path on the Pallas scorer).
+    program (the async replacement-pick hot path on the shared core).
 
-    A leading ``fori_loop`` over the (padded, ``pend_cap``) pending buffer
-    hallucinates each in-flight configuration via the K^{-1}-tracking Schur
-    appends (``_append_core_uv``) — posterior mean at the pending point from
-    the current extended system, rank-1 L + K^{-1} extension, phantom y at
-    the mean — then the downdate pick loop runs with the observation counter
-    advanced by ``n_pending``.  One device dispatch total: the seed Pallas
-    path paid one host round-trip (posterior + append programs) *per*
-    in-flight trial before it could even start scoring.
+    The leading absorb loop is ``scoring.absorb_pending`` — hardened
+    factor appends (float64 Schur accumulation / iterative refinement),
+    posterior mean at each pending point from the current extended system,
+    phantom y at the mean — then the downdate pick loop runs with the
+    observation counter advanced by ``n_pending``.  One device dispatch
+    total, and the identical absorb loop serves the clustering pipeline
+    (``acquisition.fused_cluster_propose``).
     """
     S = C.shape[0]
-    Xs, Cs = _pallas_prescale(X, C, ls, block_s)
+    Xs, Cs = scoring.prescale(X, C, ls, block_s)
     dp = Xs.shape[1]
     d = X.shape[1]
     Ps = jnp.zeros((pend_cap, dp), jnp.float32).at[:, :d].set(P / ls)
-
-    def absorb(j, carry):
-        def do(c):
-            Xs, y, mask, L, Kinv = c
-            x_new = Ps[j]
-            # cross-covariance in pre-scaled coords (unit lengthscale)
-            k_vec = matern52(Xs, x_new[None, :], jnp.float32(1.0),
-                             var)[:, 0] * mask
-            mu = k_vec @ (Kinv @ (y * mask))
-            slot = (n_obs + j).astype(jnp.int32)
-            L2, Kinv2, _, _ = _append_core_uv(L, Kinv, slot, k_vec, var,
-                                              noise)
-            return (Xs.at[slot].set(x_new), y.at[slot].set(mu),
-                    mask.at[slot].set(1.0), L2, Kinv2)
-        return jax.lax.cond(j < n_pending, do, lambda c: c, carry)
-
-    carry = (Xs, y.astype(jnp.float32), mask.astype(jnp.float32), L,
-             Kinv.astype(jnp.float32))
-    Xs, y, mask, L, Kinv = jax.lax.fori_loop(0, pend_cap, absorb, carry)
-    return _pallas_pick_downdate(Xs, y, mask, L, Kinv, Cs, S, var, noise,
-                                 n_obs + n_pending, domain_size, batch_size,
-                                 block_s, interpret)
+    Xs, y, mask, L, Linv = scoring.absorb_pending(
+        Xs, y, mask, L, Linv, Ps, n_pending, n_obs, var, noise, pend_cap)
+    return scoring.pick_downdate_loop(
+        Cs, Xs, S, y, mask, L, Linv, var, noise, n_obs + n_pending,
+        domain_size, batch_size, use_pallas=use_pallas, block_s=block_s,
+        interpret=interpret)
 
 
 # --------------------------------------------------------------------------- #
@@ -506,26 +423,26 @@ class GPState:
     n: int
     y_mean: float
     y_std: float
-    Kinv: Optional[jax.Array] = None   # maintained only when track_kinv
+    Linv: Optional[jax.Array] = None   # L^{-1}, only when track_factor
 
 
 def _grow_state(st: GPState) -> GPState:
-    """Double the padded buffers; identity rows keep L/Kinv consistent."""
+    """Double the padded buffers; identity rows keep L/Linv consistent."""
     grow = st.X.shape[0]
     pad_idx = jnp.arange(grow, 2 * grow)
     L = jnp.pad(st.L, ((0, grow), (0, grow)))
     L = L.at[pad_idx, pad_idx].set(1.0)
-    Kinv = st.Kinv
-    if Kinv is not None:
-        Kinv = jnp.pad(Kinv, ((0, grow), (0, grow)))
-        Kinv = Kinv.at[pad_idx, pad_idx].set(1.0)
+    Linv = st.Linv
+    if Linv is not None:
+        Linv = jnp.pad(Linv, ((0, grow), (0, grow)))
+        Linv = Linv.at[pad_idx, pad_idx].set(1.0)
     return dataclasses.replace(
         st,
         X=np.concatenate([st.X, np.zeros_like(st.X)], 0),
         y=np.concatenate([st.y, np.zeros_like(st.y)], 0),
         mask=np.concatenate([st.mask, np.zeros_like(st.mask)], 0),
         L=L,
-        Kinv=Kinv,
+        Linv=Linv,
     )
 
 
@@ -540,7 +457,7 @@ class GaussianProcess:
     """
 
     def __init__(self, dim: int, fit_steps: int = 40, refit_every: int = 8,
-                 track_kinv: bool = False,
+                 track_factor: bool = False,
                  warm_fit_steps: Optional[int] = None):
         self.dim = dim
         self.fit_steps = fit_steps
@@ -549,7 +466,9 @@ class GaussianProcess:
         self.warm_fit_steps = (max(8, fit_steps // 4)
                                if warm_fit_steps is None else warm_fit_steps)
         self.refit_every = max(1, int(refit_every))
-        self.track_kinv = track_kinv
+        # maintain Linv = L^{-1} alongside L (the shared scoring core's
+        # device-resident operand; was a tracked K^{-1} before ISSUE 5)
+        self.track_factor = track_factor
         self.state: Optional[GPState] = None
         self.n_fit = 0                 # obs count at the last full fit
         self._fit_params: Optional[dict] = None  # log-params of the last fit
@@ -576,9 +495,9 @@ class GaussianProcess:
             init=self._fit_params)
         self._fit_params = params
         L = cholesky_masked(jnp.asarray(Xp), jnp.asarray(mp), ls, var, noise)
-        Kinv = kinv_from_chol(L) if self.track_kinv else None
+        Linv = linv_from_chol(L) if self.track_factor else None
         self.state = GPState(Xp, yp, mp, L, ls, var, noise, n, y_mean, y_std,
-                             Kinv=Kinv)
+                             Linv=Linv)
         self.n_fit = n
         self._obs_X, self._obs_y = X, y
         return self.state
@@ -589,10 +508,10 @@ class GaussianProcess:
         if st.n >= st.X.shape[0]:
             st = _grow_state(st)
         idx = jnp.int32(st.n)
-        Kinv = st.Kinv
-        if Kinv is not None:
-            L, Kinv, X, mask = chol_kinv_append(
-                st.L, Kinv, jnp.asarray(st.X), jnp.asarray(st.mask), idx,
+        Linv = st.Linv
+        if Linv is not None:
+            L, Linv, X, mask = chol_factor_append(
+                st.L, Linv, jnp.asarray(st.X), jnp.asarray(st.mask), idx,
                 jnp.asarray(x_new, jnp.float32), st.ls, st.var, st.noise)
         else:
             L, X, mask = chol_append(st.L, jnp.asarray(st.X),
@@ -603,7 +522,7 @@ class GaussianProcess:
         y[st.n] = (float(y_raw) - st.y_mean) / st.y_std
         return dataclasses.replace(st, X=np.asarray(X), y=y,
                                    mask=np.asarray(mask), L=L, n=st.n + 1,
-                                   Kinv=Kinv)
+                                   Linv=Linv)
 
     def observe(self, X: np.ndarray, y: np.ndarray) -> GPState:
         """Incremental fit on the full observation history (X, y)."""
@@ -690,9 +609,9 @@ class GaussianProcess:
         var = jnp.exp(lp["log_var"])
         noise = jnp.exp(lp["log_noise"]) + 1e-5
         L = cholesky_masked(jnp.asarray(Xp), jnp.asarray(mp), ls, var, noise)
-        Kinv = kinv_from_chol(L) if self.track_kinv else None
+        Linv = linv_from_chol(L) if self.track_factor else None
         st = GPState(Xp, yp, mp, L, ls, var, noise, n_fit, y_mean, y_std,
-                     Kinv=Kinv)
+                     Linv=Linv)
         self.n_fit = n_fit
         for i in range(n_fit, len(y)):
             st = self._append(st, X[i], y[i])
@@ -735,10 +654,10 @@ class GaussianProcess:
                               jnp.asarray(st.mask), st.L,
                               jnp.asarray(x_new[None, :], dtype=jnp.float32),
                               st.ls, st.var, st.noise)
-        Kinv = st.Kinv
-        if Kinv is not None:
-            L, Kinv, X, mask = chol_kinv_append(
-                st.L, Kinv, jnp.asarray(st.X), jnp.asarray(st.mask),
+        Linv = st.Linv
+        if Linv is not None:
+            L, Linv, X, mask = chol_factor_append(
+                st.L, Linv, jnp.asarray(st.X), jnp.asarray(st.mask),
                 jnp.int32(st.n), jnp.asarray(x_new, dtype=jnp.float32),
                 st.ls, st.var, st.noise)
         else:
@@ -750,4 +669,4 @@ class GaussianProcess:
         y[st.n] = float(mu_std[0])
         return dataclasses.replace(
             st, X=np.asarray(X), y=y, mask=np.asarray(mask), L=L, n=st.n + 1,
-            Kinv=Kinv)
+            Linv=Linv)

@@ -19,15 +19,19 @@ categorical parameters included).
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gp as gp_lib
+from repro.core import scoring
 from repro.core.acquisition import adaptive_beta, ucb
 from repro.core.gp import GaussianProcess
 from repro.core.kmeans import kmeans_assign
+
+SCORERS = ("chol", "kinv_jnp", "kinv_pallas")
 
 
 class BaseStrategy:
@@ -35,19 +39,78 @@ class BaseStrategy:
     pick indices.  ``propose`` additionally accepts ``pending`` — the
     encoded configurations of trials currently in flight (the ask/tell
     core's ledger) — which GP strategies hallucinate (GP-BUCB semantics:
-    variance contraction, no mean update) before picking."""
+    variance contraction, no mean update) before picking.
+
+    ``scorer`` selects the GP scoring backend:
+
+      * ``"chol"`` (default) — the L-based fused path (``gp.fused_propose``),
+      * ``"kinv_pallas"`` — the shared conditioning-hardened factor core
+        through the ``gp_acquisition`` Pallas kernels (what
+        ``use_pallas=True`` resolves to),
+      * ``"kinv_jnp"`` — the same core executed as the kernels' jnp oracle
+        twin (the parity path the 3-way near-tie tests drive).
+
+    Every propose through a fitted GP also stages ``last_cond_proxy`` — a
+    host-visible condition-number lower bound for K from the Cholesky
+    diagonal, computed lazily on access (reading it costs one tiny device
+    program + sync; not reading it costs nothing); above
+    ``scoring.COND_PROXY_WARN`` a one-time warning fires on access
+    (float32 posterior scoring is presumed unreliable there).
+    """
 
     needs_gp = True
 
     def __init__(self, dim: int, domain_size: float, fit_steps: int = 40,
                  use_pallas: bool = False, pallas_interpret: bool = True,
-                 refit_every: int = 8):
+                 refit_every: int = 8, scorer: Optional[str] = None):
+        self._scorer_explicit = scorer is not None
+        if scorer is None:
+            scorer = "kinv_pallas" if use_pallas else "chol"
+        elif scorer not in SCORERS:
+            raise ValueError(f"unknown scorer {scorer!r}; "
+                             f"choose from {SCORERS}")
+        elif use_pallas and scorer != "kinv_pallas":
+            # contradictory request: raise like every other invalid config
+            # instead of silently dropping one of the two flags
+            raise ValueError(f"use_pallas=True conflicts with "
+                             f"scorer={scorer!r} (the Pallas kernels are "
+                             f"scorer='kinv_pallas')")
+        self.scorer = scorer
+        self.use_pallas = scorer == "kinv_pallas"
         self.gp = GaussianProcess(dim, fit_steps=fit_steps,
                                   refit_every=refit_every,
-                                  track_kinv=use_pallas)
+                                  track_factor=scorer != "chol")
         self.domain_size = domain_size
-        self.use_pallas = use_pallas
         self.pallas_interpret = pallas_interpret
+        self._cond_src = None
+        self._cond_warned = False
+
+    def _update_cond_proxy(self, st, na: Optional[int] = None) -> None:
+        """Stage the conditioning diagnostic for the active window (the
+        proxy itself is computed lazily on ``last_cond_proxy`` access, so
+        an ask that never reads it pays no extra device dispatch or host
+        sync — the one-device-program-per-ask contract holds)."""
+        self._cond_src = (st.L, st.mask, na)
+
+    @property
+    def last_cond_proxy(self) -> Optional[float]:
+        """Condition-number lower bound for the last propose's active
+        kernel window (None before the first GP-backed propose)."""
+        if self._cond_src is None:
+            return None
+        L, m, na = self._cond_src
+        if na is not None:
+            L, m = L[:na, :na], m[:na]
+        val = float(scoring.cond_proxy_from_chol(L, jnp.asarray(m)))
+        if val > scoring.COND_PROXY_WARN and not self._cond_warned:
+            self._cond_warned = True
+            warnings.warn(
+                f"GP kernel condition proxy {val:.2e} exceeds "
+                f"{scoring.COND_PROXY_WARN:.0e}: float32 posterior scores "
+                "may be unreliable (consider a larger noise floor, or "
+                "enabling x64 for float64 Schur accumulation)",
+                RuntimeWarning, stacklevel=2)
+        return val
 
     def _predict(self, st, C: np.ndarray):
         if self.use_pallas:
@@ -111,20 +174,22 @@ class FusedHallucinationStrategy(BaseStrategy):
         """Window + dispatch the fused program against an explicit state.
 
         ``pending`` (encoded in-flight rows) rides along into the device
-        program: ``fused_propose_pending`` (or, on the Pallas scorer path,
-        ``fused_propose_pallas_pending`` with its K^{-1}-tracking Schur
-        absorb) hallucinates them inside the jit'd fori_loop, so an async
-        replacement pick is exactly one GP program dispatch on *both* paths.
+        program: ``fused_propose_pending`` (or, on the factor-core scorer
+        paths, ``fused_propose_pallas_pending`` with the shared hardened
+        ``scoring.absorb_pending`` loop) hallucinates them inside the jit'd
+        fori_loop, so an async replacement pick is exactly one GP program
+        dispatch on *every* path.
         """
         n_pend = 0 if pending is None else len(pending)
         # active window: a 64-multiple slice covering n + pending +
         # batch_size rows.  The leading principal block of L is the Cholesky
-        # of the leading block of K, so slicing is exact — it just avoids
-        # paying the power-of-two padded size (up to 2n) in the O(n^2 S)
-        # posterior.
+        # of the leading block of K (and of L^{-1} the inverse of that
+        # block), so slicing is exact — it just avoids paying the
+        # power-of-two padded size (up to 2n) in the O(n^2 S) posterior.
         n_pad = st.X.shape[0]
         na = min(n_pad, max(16,
                             -(-(st.n + n_pend + batch_size) // 64) * 64))
+        self._update_cond_proxy(st, na)
         C = jnp.asarray(np.ascontiguousarray(candidates, dtype=np.float32))
         args = (jnp.asarray(st.X[:na]), jnp.asarray(st.y[:na]),
                 jnp.asarray(st.mask[:na]))
@@ -136,16 +201,18 @@ class FusedHallucinationStrategy(BaseStrategy):
             cap = -(-n_pend // 4) * 4
             P = np.zeros((cap, st.X.shape[1]), np.float32)
             P[:n_pend] = np.asarray(pending, dtype=np.float32)
-        if self.use_pallas and n_pend:
+        if self.scorer != "chol" and n_pend:
             picks = gp_lib.fused_propose_pallas_pending(
-                *args, st.L[:na, :na], st.Kinv[:na, :na],
+                *args, st.L[:na, :na], st.Linv[:na, :na],
                 jnp.asarray(P), jnp.int32(n_pend), *tail,
                 batch_size=batch_size, pend_cap=cap,
-                interpret=self.pallas_interpret)
-        elif self.use_pallas:
+                interpret=self.pallas_interpret,
+                use_pallas=self.use_pallas)
+        elif self.scorer != "chol":
             picks = gp_lib.fused_propose_pallas(
-                *args, st.L[:na, :na], st.Kinv[:na, :na], *tail,
-                batch_size=batch_size, interpret=self.pallas_interpret)
+                *args, st.L[:na, :na], st.Linv[:na, :na], *tail,
+                batch_size=batch_size, interpret=self.pallas_interpret,
+                use_pallas=self.use_pallas)
         elif n_pend:
             picks = gp_lib.fused_propose_pending(
                 args[0], args[1], args[2], st.L[:na, :na],
@@ -163,13 +230,29 @@ class ClusteringStrategy(BaseStrategy):
     ``propose`` dispatches ``acquisition.fused_cluster_propose`` — pending
     absorb, posterior + UCB, ``lax.top_k``, weighted k-means, and the
     per-cluster argmax all run inside one jit'd program; the (n_mc,)
-    acquisition surface never reaches the host.  ``propose_host`` keeps the
-    numpy pipeline as the parity reference (with the empty-cluster backfill
-    fixed to never re-select an already-picked index).
+    acquisition surface never reaches the host.  Scoring and pending
+    absorption go through the shared conditioning-hardened factor core
+    (``core.scoring``) — the same backend as the fused GP-BUCB path, with
+    ``use_pallas`` selecting the ``gp_acquisition`` kernels and the default
+    running their jnp twin.  ``propose_host`` keeps the numpy pipeline as
+    the parity reference (with the empty-cluster backfill fixed to never
+    re-select an already-picked index).
     """
 
     def __init__(self, *args, top_frac: float = 0.2, **kwargs):
         super().__init__(*args, **kwargs)
+        if self.scorer == "chol":
+            if self._scorer_explicit:
+                # an explicitly requested L-path scorer cannot be honored:
+                # raise instead of silently substituting a backend
+                raise ValueError(
+                    "ClusteringStrategy scores through the shared factor "
+                    "core; scorer must be 'kinv_jnp' or 'kinv_pallas'")
+            # default: the shared factor core's jnp backend — the L-based
+            # posterior clustering used before ISSUE 5 was a second,
+            # divergent scoring backend
+            self.scorer = "kinv_jnp"
+            self.gp.track_factor = True
         self.top_frac = top_frac
 
     def _n_top(self, S: int, batch_size: int) -> int:
@@ -193,15 +276,17 @@ class ClusteringStrategy(BaseStrategy):
             P[:n_pend] = np.asarray(pending, dtype=np.float32)
         n_pad = st.X.shape[0]
         na = min(n_pad, max(16, -(-(st.n + n_pend) // 64) * 64))
+        self._update_cond_proxy(st, na)
         picks = fused_cluster_propose(
             jnp.asarray(st.X[:na]), jnp.asarray(st.y[:na]),
-            jnp.asarray(st.mask[:na]), st.L[:na, :na],
+            jnp.asarray(st.mask[:na]), st.L[:na, :na], st.Linv[:na, :na],
             jnp.asarray(P), jnp.int32(n_pend),
             jnp.asarray(np.ascontiguousarray(candidates, dtype=np.float32)),
             st.ls, st.var, st.noise, jnp.int32(st.n),
             jnp.float32(self.domain_size), jax.random.PRNGKey(seed),
             batch_size=batch_size, n_top=self._n_top(S, batch_size),
-            pend_cap=cap)
+            pend_cap=cap, use_pallas=self.use_pallas,
+            interpret=self.pallas_interpret)
         return [int(i) for i in np.asarray(picks)]
 
     def propose_host(self, X, y, candidates, batch_size, seed=0,

@@ -84,12 +84,20 @@ def ucb_scores_pallas(cands, X, mask, Kinv, alpha, var, noise, beta,
     return out[:, 0]
 
 
-def _score_cov_kernel(c_ref, x_ref, mask_ref, kinv_ref, alpha_ref, scal_ref,
+def _score_cov_kernel(c_ref, x_ref, mask_ref, linvt_ref, alpha_ref, scal_ref,
                       mu_ref, sig2_ref, k_ref):
     """Posterior scoring pass that also *emits* the masked cross-covariance
     block k(C, X) so the batch slot loop can rescore candidates with O(n S)
     rank-1 variance downdates (``_downdate_kernel``) instead of re-running
-    the O(n^2 S) ``t = k @ Kinv`` quadratic form per slot."""
+    the O(n^2 S) quadratic form per slot.
+
+    Conditioning (ISSUE 5): the resident (n, n) operand is the *transposed
+    triangular inverse factor* L^{-T}, not K^{-1}, and the posterior
+    variance is the monotone sum of squares ``sig2 = var + noise −
+    Σ_j (k L^{-T})_j²`` — the Cholesky path's own formula, evaluated as one
+    MXU matmul.  The old ``q = Σ (k K^{-1}) · k`` form cancels its large
+    mixed-sign intermediates and measured ~250x the float32 error when the
+    fitted noise collapses, flipping near-tied argmaxes."""
     c = c_ref[...]                      # (BS, d)  already / lengthscale
     x = x_ref[...]                      # (n, d)   already / lengthscale
     mask = mask_ref[...]                # (1, n)
@@ -104,9 +112,9 @@ def _score_cov_kernel(c_ref, x_ref, mask_ref, kinv_ref, alpha_ref, scal_ref,
     s = jnp.sqrt(5.0) * r
     k = var * (1.0 + s + (5.0 / 3.0) * d2) * jnp.exp(-s) * mask  # (BS, n)
 
-    t = jax.lax.dot(k, kinv_ref[...],
-                    preferred_element_type=jnp.float32)   # (BS, n)
-    q = jnp.sum(t * k, axis=-1)
+    t = jax.lax.dot(k, linvt_ref[...],
+                    preferred_element_type=jnp.float32)   # (BS, n) = k L^-T
+    q = jnp.sum(t * t, axis=-1)
     mu = jnp.sum(k * alpha_ref[...], axis=-1)             # alpha (1, n)
     sig2 = jnp.maximum(var + noise - q, 1e-10)
     mu_ref[...] = mu[:, None]
@@ -115,9 +123,14 @@ def _score_cov_kernel(c_ref, x_ref, mask_ref, kinv_ref, alpha_ref, scal_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def score_cov_pallas(cands, X, mask, Kinv, alpha, var, noise,
+def score_cov_pallas(cands, X, mask, Linv, alpha, var, noise,
                      block_s: int = 256, interpret: bool = True):
-    """(mu, sig2, cross-covariance block) for cands (S, d) pre-scaled."""
+    """(mu, sig2, cross-covariance block) for cands (S, d) pre-scaled.
+
+    ``Linv`` is the triangular inverse factor L^{-1} (the shared scoring
+    core's device-resident operand); the kernel receives its transpose so
+    the variance pass is one plain ``dot``.
+    """
     S, d = cands.shape
     n = X.shape[0]
     scal = jnp.stack([var, noise, jnp.zeros_like(var),
@@ -130,7 +143,7 @@ def score_cov_pallas(cands, X, mask, Kinv, alpha, var, noise,
             pl.BlockSpec((block_s, d), lambda i: (i, 0)),
             pl.BlockSpec((n, d), lambda i: (0, 0)),
             pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),         # L^-T (resident)
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((1, 4), lambda i: (0, 0)),
         ],
@@ -146,7 +159,7 @@ def score_cov_pallas(cands, X, mask, Kinv, alpha, var, noise,
         ],
         interpret=interpret,
     )(cands.astype(jnp.float32), X.astype(jnp.float32),
-      mask[None, :].astype(jnp.float32), Kinv.astype(jnp.float32),
+      mask[None, :].astype(jnp.float32), Linv.T.astype(jnp.float32),
       alpha[None, :].astype(jnp.float32), scal.astype(jnp.float32))
     return mu[:, 0], sig2[:, 0], k
 

@@ -35,14 +35,15 @@ def _prescale(cands, X, ls, block_s):
     return c, Xp, S
 
 
-def score_cov(cands, X, mask, Kinv, alpha, ls, var, noise, *,
+def score_cov(cands, X, mask, Linv, alpha, ls, var, noise, *,
               block_s: int = 256, interpret: bool = True):
     """(mu, sig2) for every candidate in ONE kernel dispatch (the cached
-    cross-covariance block the kernel also emits is dropped here)."""
+    cross-covariance block the kernel also emits is dropped here).
+    ``Linv`` is the triangular inverse factor L^{-1}."""
     c, Xp, S = _prescale(cands, X, ls, block_s)
     mu, sig2, _ = score_cov_pallas(
         jnp.asarray(c), jnp.asarray(Xp), jnp.asarray(mask, jnp.float32),
-        jnp.asarray(Kinv, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(Linv, jnp.float32), jnp.asarray(alpha, jnp.float32),
         jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
         block_s=block_s, interpret=interpret)
     return np.asarray(mu)[:S], np.asarray(sig2)[:S]
@@ -71,21 +72,20 @@ def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
 
 def gp_mean_std(st, cands, interpret: bool = True):
     """GPState-facing adapter returning (mu, sd) in the original y scale."""
-    if getattr(st, "Kinv", None) is not None:
-        # incrementally-maintained inverse (track_kinv): no O(n^3) solve here
-        Kinv = np.asarray(st.Kinv)
+    if getattr(st, "Linv", None) is not None:
+        # incrementally-maintained factor (track_factor): no O(n^3) solve
+        Linv = np.asarray(st.Linv)
     else:
         L = np.asarray(st.L)
         eye = np.eye(L.shape[0], dtype=np.float32)
         import scipy.linalg as sla
         Linv = sla.solve_triangular(L, eye, lower=True)
-        Kinv = Linv.T @ Linv
-    alpha = Kinv @ (np.asarray(st.y, np.float32)
-                    * np.asarray(st.mask, np.float32))
+    alpha = Linv.T @ (Linv @ (np.asarray(st.y, np.float32)
+                              * np.asarray(st.mask, np.float32)))
     var = float(st.var)
     noise = float(st.noise)
     # one scoring-kernel dispatch yields both moments (the old path ran
     # the UCB kernel twice, with beta=0 and beta=1, to recover sd)
-    mu, sig2 = score_cov(cands, st.X, st.mask, Kinv, alpha,
+    mu, sig2 = score_cov(cands, st.X, st.mask, Linv, alpha,
                          np.asarray(st.ls), var, noise, interpret=interpret)
     return mu * st.y_std + st.y_mean, np.sqrt(sig2) * st.y_std

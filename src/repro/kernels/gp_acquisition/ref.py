@@ -1,12 +1,19 @@
-"""Pure-jnp oracle for the fused GP-UCB acquisition scorer.
+"""Pure-jnp oracles for the fused GP-UCB acquisition scorer.
 
-Given the padded training set (X, mask), its precomputed K^-1 (from the
-Cholesky) and alpha = K^-1 y, score S candidate points:
+Given the padded training set (X, mask), the triangular inverse factor
+Linv = L^-1 of its Cholesky, and alpha = K^-1 y, score S candidates:
 
     k_i   = matern52(X, c_i)            (n,)
     mu_i  = k_i . alpha
-    var_i = var + noise - k_i . (Kinv k_i)
+    var_i = var + noise - ||k_i Linv^T||^2     (monotone sum of squares)
     ucb_i = mu_i + sqrt(beta) * sqrt(var_i)
+
+The sum-of-squares form is the conditioning-hardened scoring contract
+(ISSUE 5) shared with the Pallas kernels; ``score_cov_ref`` doubles as the
+shared core's jnp execution backend.  ``ucb_scores_ref`` alone retains the
+legacy K^-1 quadratic form ``k . (Kinv k)`` — it is the baseline the
+``pallas_rescore_full`` benchmark rows measure against, and its float32
+cancellation on ill-conditioned K is exactly what the hardening removed.
 
 This is Mango's Monte-Carlo acquisition-maximization hot loop (paper §2.3):
 S is 10^3..10^5 per pick, times batch_size picks, times iterations.
@@ -36,11 +43,20 @@ def ucb_scores_ref(cands, X, mask, Kinv, alpha, ls, var, noise, beta):
     return mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
 
 
-def score_cov_ref(cands, X, mask, Kinv, alpha, ls, var, noise):
-    """Oracle for the score+cross-covariance kernel: (mu, sig2, k(C, X))."""
+def score_cov_ref(cands, X, mask, Linv, alpha, ls, var, noise):
+    """Oracle for the score+cross-covariance kernel: (mu, sig2, k(C, X)).
+
+    Consumes the triangular inverse factor ``Linv = L^{-1}`` and evaluates
+    the posterior variance as the monotone sum of squares ``var + noise −
+    ‖k Linvᵀ‖²`` — the conditioning-hardened form shared with the Pallas
+    kernel (the legacy K^{-1} quadratic form above cancels catastrophically
+    on near-noiseless fits).  Doubles as the shared scoring core's jnp
+    execution backend (``scoring.posterior_scores(use_pallas=False)``).
+    """
     K = matern52(cands, X, ls, var) * mask[None, :]       # (S, n)
     mu = K @ alpha
-    q = jnp.sum((K @ Kinv) * K, axis=-1)
+    t = K @ Linv.T
+    q = jnp.sum(t * t, axis=-1)
     sig2 = jnp.maximum(var + noise - q, 1e-10)
     return mu, sig2, K
 

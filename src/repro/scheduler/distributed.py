@@ -11,7 +11,12 @@ Semantics modeled on Listing 4 (``train_clf.delay(par)`` + ``process.get()``):
   * an async API (``submit`` / ``gather``) used by the asynchronous tuner.
 
 Fault injection exists so the test-suite can drill the tuner's partial-result
-contract under worker crashes and stragglers deterministically.
+contract under worker crashes and stragglers deterministically: each task
+carries its own RNG seeded from ``(faults.seed, submit sequence)``, so the
+injected failure/straggler set is a pure function of the submission order —
+identical across runs regardless of how worker threads race on the queue
+(the old shared ``random.Random`` made the dropped set depend on thread
+scheduling).
 """
 from __future__ import annotations
 
@@ -34,11 +39,17 @@ class FaultInjection:
 
 
 class _Task(TaskHandle):
-    __slots__ = ("retries",)
+    __slots__ = ("retries", "rng")
 
-    def __init__(self, params):
+    def __init__(self, params, rng: Optional[random.Random] = None):
         super().__init__(params)
         self.retries = 0
+        # per-task fault RNG, seeded from (faults.seed, submit sequence):
+        # injected failures/stragglers are a pure function of the task, so
+        # two runs drop identical task sets no matter how the queue races
+        # tasks across worker threads (a shared — or even per-worker — RNG
+        # couldn't give that: task -> worker assignment is nondeterministic)
+        self.rng = rng
 
 
 class TaskQueueScheduler:
@@ -57,7 +68,7 @@ class TaskQueueScheduler:
         self.timeout = timeout
         self.max_retries = max_retries
         self.faults = faults or FaultInjection()
-        self._rng = random.Random(self.faults.seed)
+        self._task_seq = 0              # submit counter seeding task RNGs
         self._q: "queue.Queue[Optional[Tuple[_Task, TrialFn]]]" = queue.Queue()
         self._workers: List[threading.Thread] = []
         self._stop = threading.Event()
@@ -91,9 +102,11 @@ class TaskQueueScheduler:
                 return
             task, fn = item
             try:
-                with self._lock:
-                    fail = self._rng.random() < self.faults.failure_rate
-                    straggle = self._rng.random() < self.faults.straggler_rate
+                # the task's own RNG decides its fate (no lock needed — one
+                # worker holds a task at a time, and retries re-enqueue the
+                # same object, drawing the next values of its stream)
+                fail = task.rng.random() < self.faults.failure_rate
+                straggle = task.rng.random() < self.faults.straggler_rate
                 if straggle:
                     self._bump("straggled")
                     time.sleep(self.faults.straggler_delay)
@@ -135,7 +148,11 @@ class TaskQueueScheduler:
                                "workers have exited; create a new "
                                "TaskQueueScheduler")
         self.start()
-        task = _Task(params)
+        with self._lock:
+            seq = self._task_seq
+            self._task_seq += 1
+        task = _Task(params,
+                     rng=random.Random(self.faults.seed * 1_000_003 + seq))
         self._q.put((task, fn))
         return task
 

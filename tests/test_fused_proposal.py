@@ -125,10 +125,10 @@ def test_observe_refits_on_prefix_change_or_shrink():
 
 
 def test_fused_pallas_threading():
-    """use_pallas routes scoring through the gp_acquisition kernel; the
-    first pick (pure scoring, no hallucination yet) matches the chol path
-    and batches stay valid/unique.  Later slots may differ by float32
-    near-ties between the Kinv quadratic form and the triangular solve."""
+    """use_pallas routes scoring through the gp_acquisition kernel via the
+    shared factor core; the first pick (pure scoring, no hallucination
+    yet) matches the chol path and batches stay valid/unique.  (Full-batch
+    and noiseless near-tie parity live in test_device_proposal_parity.)"""
     X, y, C = _data(seed=0)
     fused = FusedHallucinationStrategy(2, 1e4, fit_steps=15)
     pallas = FusedHallucinationStrategy(2, 1e4, fit_steps=15,

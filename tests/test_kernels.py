@@ -99,6 +99,8 @@ def test_gp_acquisition(n, d, S):
 
 
 def _gp_system(n=64, d=5, S=512, seed=0):
+    import scipy.linalg as sla
+
     rng = np.random.default_rng(seed)
     X = rng.uniform(size=(n, d)).astype(np.float32)
     mask = np.ones(n, np.float32)
@@ -109,7 +111,11 @@ def _gp_system(n=64, d=5, S=512, seed=0):
                             1.0, var))
     K = K * mask[:, None] * mask[None, :]
     K[np.diag_indices(n)] = np.where(mask > 0, var + noise + 1e-6, 1.0)
-    Kinv = np.linalg.inv(K).astype(np.float32)
+    # the scoring kernel consumes the triangular inverse factor L^{-1}
+    # (ISSUE 5); K and K^{-1} stay around for the from-scratch checks
+    L = np.linalg.cholesky(K).astype(np.float32)
+    Linv = sla.solve_triangular(L, np.eye(n, dtype=np.float32),
+                                lower=True).astype(np.float32)
     y = (rng.normal(size=n) * mask).astype(np.float32)
     C = rng.uniform(size=(S, d)).astype(np.float32)
     # pre-scaled, lane-padded coords (what the fused proposal feeds in)
@@ -118,34 +124,53 @@ def _gp_system(n=64, d=5, S=512, seed=0):
     Cs[:, :d] = C / ls
     Xs = np.zeros((n, dp), np.float32)
     Xs[:, :d] = X / ls
-    return Xs, Cs, mask, K, Kinv, y, var, noise
+    return Xs, Cs, mask, K, Linv, y, var, noise
 
 
 def test_gp_score_cov_kernel():
     """score+cross-covariance kernel vs the jnp oracle (mu, sig2, block)."""
-    Xs, Cs, mask, _, Kinv, y, var, noise = _gp_system()
-    alpha = Kinv @ y
+    Xs, Cs, mask, _, Linv, y, var, noise = _gp_system()
+    alpha = Linv.T @ (Linv @ y)
     mu, sig2, Kc = score_cov_pallas(
         jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
-        jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+        jnp.asarray(Linv), jnp.asarray(alpha), jnp.float32(var),
         jnp.float32(noise))
     mu_r, sig2_r, Kc_r = score_cov_ref(
         jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
-        jnp.asarray(Kinv), jnp.asarray(alpha), 1.0, var, noise)
+        jnp.asarray(Linv), jnp.asarray(alpha), 1.0, var, noise)
     np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), atol=1e-4)
     np.testing.assert_allclose(np.asarray(sig2), np.asarray(sig2_r),
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(Kc), np.asarray(Kc_r), atol=1e-5)
 
 
+def test_gp_score_cov_sumsq_matches_direct_posterior():
+    """The factor sum-of-squares variance equals the from-scratch posterior
+    ``var + noise − k K^{-1} kᵀ`` computed in float64 — the conditioning
+    contract of the hardened scorer."""
+    Xs, Cs, mask, K, Linv, y, var, noise = _gp_system()
+    alpha = Linv.T @ (Linv @ y)
+    mu, sig2, Kc = score_cov_pallas(
+        jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
+        jnp.asarray(Linv), jnp.asarray(alpha), jnp.float32(var),
+        jnp.float32(noise))
+    kC = np.asarray(Kc, np.float64)
+    q = np.sum((kC @ np.linalg.inv(K.astype(np.float64))) * kC, -1)
+    sig2_direct = np.maximum(var + noise - q, 1e-10)
+    np.testing.assert_allclose(np.asarray(sig2), sig2_direct, atol=2e-5)
+    mu_direct = kC @ np.linalg.solve(K.astype(np.float64),
+                                     y.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(mu), mu_direct, atol=2e-4)
+
+
 def test_gp_var_downdate_kernel_matches_extended_system():
     """The rank-1 downdate kernel equals (a) the jnp oracle and (b) the
     from-scratch variance of the system extended by the absorbed point."""
-    Xs, Cs, mask, K, Kinv, y, var, noise = _gp_system()
-    alpha = Kinv @ y
+    Xs, Cs, mask, K, Linv, y, var, noise = _gp_system()
+    alpha = Linv.T @ (Linv @ y)
     _, sig2, Kc = score_cov_pallas(
         jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
-        jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+        jnp.asarray(Linv), jnp.asarray(alpha), jnp.float32(var),
         jnp.float32(noise))
     star = 17                        # absorb candidate 17
     x_star = Cs[star]

@@ -243,6 +243,71 @@ def test_sync_kill_resume_via_state_dict(tmp_path):
         [(p["x"], p["y"]) for p in full.params_tried]
 
 
+# ------------------- checkpoint round-trips through the hardened core
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sync_kill_resume_with_hardened_scorer(tmp_path, use_pallas):
+    """Kill/resume replay reproduces identical picks when proposals run
+    through the unified factor-scoring core (ISSUE 5): the checkpoint's GP
+    fit schedule must replay the hardened (L, L^{-1}) append chain
+    bit-for-bit in the sync driver.  ``use_pallas=False`` additionally
+    covers the clustering strategy, which now also scores through the
+    shared core."""
+    conf = dict(optimizer="bayesian", num_iteration=5, batch_size=2,
+                seed=11, refit_every=4, use_pallas=use_pallas, **FAST)
+    if not use_pallas:
+        conf["optimizer"] = "clustering"
+    objective = lambda b: ([quad(p) for p in b], list(b))  # noqa: E731
+    full = Tuner(SPACE, objective, conf).maximize()
+
+    ckpt = tmp_path / "hardened.json"
+    conf_i = {**conf, "checkpoint_path": str(ckpt), "num_iteration": 2}
+    Tuner(SPACE, objective, conf_i).maximize()
+    resumed = Tuner(SPACE, objective,
+                    {**conf_i, "num_iteration": 5}).maximize()
+    assert [(p["x"], p["y"]) for p in resumed.params_tried] == \
+        [(p["x"], p["y"]) for p in full.params_tried]
+    assert resumed.objective_values == full.objective_values
+
+
+def test_async_kill_resume_with_hardened_scorer(tmp_path):
+    """Async kill/resume through the Pallas factor core: in-flight trials
+    re-dispatch from the ledger and the replacement picks (which absorb
+    pending rows via the hardened ``scoring.absorb_pending`` loop inside
+    the device program) replay identically."""
+    kw = dict(num_evals=8, batch_size=2, initial_random=2, seed=21,
+              use_pallas=True, **FAST)
+    full = AsyncTuner(SPACE, quad, InlineScheduler(), **kw).maximize()
+
+    ckpt = tmp_path / "hardened_async.json"
+    stopped = AsyncTuner(SPACE, quad, InlineScheduler(),
+                         checkpoint_path=str(ckpt),
+                         early_stopping=lambda r: r.iterations >= 4,
+                         **kw).maximize()
+    assert stopped.iterations == 4
+    resumed = AsyncTuner(SPACE, quad, InlineScheduler(),
+                         checkpoint_path=str(ckpt), **kw).maximize()
+    assert [(p["x"], p["y"]) for p in resumed.params_tried] == \
+        [(p["x"], p["y"]) for p in full.params_tried]
+    assert resumed.objective_values == full.objective_values
+
+
+def test_state_dict_format_unchanged_by_scoring_core():
+    """The unified core must not change the serialized format: version
+    stays 1, the key set is stable, and the GP snapshot still carries only
+    the fit schedule (n_fit + raw log-params) — the tracked factor is a
+    pure function of those, so no migration shim is needed."""
+    opt = AskTellOptimizer(SPACE, seed=0, use_pallas=True, **FAST)
+    for t in opt.ask(3):
+        opt.tell(t.id, quad(t.params))
+    opt.ask(1)
+    sd = json.loads(json.dumps(opt.state_dict()))
+    assert sd["version"] == 1
+    assert set(sd) == {"version", "next_id", "ask_count", "n_failed",
+                       "sign", "best_trace", "trials", "rng_state", "gp"}
+    assert set(sd["gp"]) == {"n_fit", "log_params"}
+    assert set(sd["gp"]["log_params"]) == {"log_ls", "log_var", "log_noise"}
+
+
 # ------------------------------------------------------------ driver surface
 def test_async_tuner_returns_tuner_results_with_trace():
     res = AsyncTuner(SPACE, quad, InlineScheduler(), num_evals=6,

@@ -215,6 +215,51 @@ def test_taskqueue_fault_injection_and_retry():
     sched.shutdown()
 
 
+@pytest.mark.parametrize("straggler_rate", [0.0, 0.4])
+def test_taskqueue_fault_injection_is_deterministic(straggler_rate):
+    """Injected failures are a pure function of (faults.seed, submit
+    order): two runs at failure_rate=0.5 must drop *identical* task sets
+    even though the queue races tasks across 8 worker threads (the old
+    shared ``random.Random`` let thread scheduling decide which tasks
+    died)."""
+    def run():
+        sched = TaskQueueScheduler(
+            n_workers=8,
+            faults=FaultInjection(failure_rate=0.5, seed=13,
+                                  straggler_rate=straggler_rate,
+                                  straggler_delay=0.01))
+        batch = [{"x": round(v, 6)} for v in np.linspace(0, 1, 40)]
+        tasks = [sched.submit(trial, p) for p in batch]
+        sched.gather(tasks, timeout=30.0)
+        dropped = frozenset(t.params["x"] for t in tasks
+                            if t.error is not None)
+        sched.shutdown()
+        return dropped
+
+    first = run()
+    assert 0 < len(first) < 40        # the injection actually fired
+    for _ in range(2):
+        assert run() == first
+
+
+def test_taskqueue_fault_determinism_unaffected_by_retry_races():
+    """Retries draw from the failed task's own RNG stream, so the final
+    survivor set stays deterministic under max_retries too."""
+    def run():
+        sched = TaskQueueScheduler(
+            n_workers=6, max_retries=1,
+            faults=FaultInjection(failure_rate=0.5, seed=5))
+        tasks = [sched.submit(trial, {"x": round(v, 6)})
+                 for v in np.linspace(0, 1, 32)]
+        sched.gather(tasks, timeout=30.0)
+        dropped = frozenset(t.params["x"] for t in tasks
+                            if t.error is not None)
+        sched.shutdown()
+        return dropped
+
+    assert run() == run()
+
+
 def test_taskqueue_no_faults_full_batch():
     sched = TaskQueueScheduler(n_workers=2)
     evals, params = sched.make_objective(trial)(

@@ -89,6 +89,21 @@ def test_clustering_propose_stays_on_device(monkeypatch):
     assert len(set(picked)) == 5
 
 
+def test_contradictory_scorer_configs_raise():
+    """Invalid/contradictory scoring configs raise instead of silently
+    substituting a backend (matching the repo's validation convention)."""
+    with pytest.raises(ValueError, match="unknown scorer"):
+        HallucinationStrategy(2, 1e4, scorer="nope")
+    with pytest.raises(ValueError, match="conflicts"):
+        HallucinationStrategy(2, 1e4, use_pallas=True, scorer="chol")
+    with pytest.raises(ValueError, match="factor core"):
+        ClusteringStrategy(2, 1e4, scorer="chol")
+    # the defaults resolve, not raise
+    assert ClusteringStrategy(2, 1e4).scorer == "kinv_jnp"
+    assert ClusteringStrategy(2, 1e4, use_pallas=True).scorer == \
+        "kinv_pallas"
+
+
 def test_kmeans_partitions():
     rng = np.random.default_rng(0)
     X = np.concatenate([rng.normal(0, 0.05, (30, 2)),
