@@ -52,6 +52,7 @@ BASELINES = [
     ("tpe_pallas", "tpe_host"),
     ("kinv_f64_schur", "kinv_f32_schur"),
     ("refit_warm", "refit_cold"),
+    ("studies_per_sec", "multi_study_loop"),
 ]
 
 
@@ -80,7 +81,11 @@ def _ratio(old, new, name):
         if o > 0:
             return n / o, True
     o, n = old[name], new[name]
-    return (n / o if o > 0 else float("inf")), False
+    if o <= 0:
+        # 0-valued counter rows (e.g. steady_state_retrace) are equal-or-
+        # better when the new run is also 0 — not an infinite regression.
+        return (1.0 if n <= 0 else float("inf")), False
+    return n / o, False
 
 
 def delta_table(old, new, threshold=1.15, gates=()):

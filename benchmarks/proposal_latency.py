@@ -193,17 +193,19 @@ def run_perslot_rescore(n_grid=(64, 256, 1024), n_cand=2000, dim=4, reps=5,
                         seed=0):
     """The per-slot rescore op itself, old vs new, across training-set size.
 
-    ``pallas_rescore_full``: the seed per-slot op — re-run the full scoring
-    kernel (``t = k @ Kinv``: O(n^2 S)).  ``pallas_rescore_downdate``: the
+    ``pallas_rescore_full``: re-run the full factor scoring kernel per slot
+    (``t = k @ L^{-T}``: O(n^2 S)).  ``pallas_rescore_downdate``: the
     in-kernel rank-1 variance downdate (matvec against the cached cross-
     covariance block: O(n S)).  The *ratio across n rows* is the point:
     full rescoring grows ~quadratically with n, the downdate ~linearly.
+    (The legacy K^{-1} UCB kernel these rows originally baselined was
+    deleted with the K^{-1} path; the baseline is now the factor scorer.)
     """
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.gp_acquisition.gp_acquisition import (
-        score_cov_pallas, ucb_scores_pallas, var_downdate_pallas)
+        score_cov_pallas, var_downdate_pallas)
     from repro.kernels.gp_acquisition.ref import matern52
 
     rng = np.random.default_rng(seed)
@@ -216,25 +218,19 @@ def run_perslot_rescore(n_grid=(64, 256, 1024), n_cand=2000, dim=4, reps=5,
         var, noise = 1.0, 0.05
         K = np.array(matern52(jnp.asarray(Xs), jnp.asarray(Xs), 1.0, var))
         K[np.diag_indices(n)] = var + noise
-        Kinv = np.linalg.inv(K).astype(np.float32)
         import scipy.linalg as sla
         L = np.linalg.cholesky(K).astype(np.float32)
         Linv = sla.solve_triangular(L, np.eye(n, dtype=np.float32),
                                     lower=True).astype(np.float32)
         y = rng.normal(size=n).astype(np.float32)
-        alpha = (Kinv @ y).astype(np.float32)
+        alpha = (Linv.T @ (Linv @ y)).astype(np.float32)
         Cs = np.zeros((n_cand, dp), np.float32)
         Cs[:, :dim] = rng.uniform(size=(n_cand, dim)).astype(np.float32) * 2
 
-        # the legacy full-rescore kernel consumes K^{-1}; the scoring pass
-        # (whose cached block the downdate rescores from) takes the factor
         args = (jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
-                jnp.asarray(Kinv), jnp.asarray(alpha), jnp.float32(var),
+                jnp.asarray(Linv), jnp.asarray(alpha), jnp.float32(var),
                 jnp.float32(noise))
-        _, sig2, Kc = jax.block_until_ready(score_cov_pallas(
-            jnp.asarray(Cs), jnp.asarray(Xs), jnp.asarray(mask),
-            jnp.asarray(Linv), jnp.asarray(alpha), jnp.float32(var),
-            jnp.float32(noise)))
+        _, sig2, Kc = jax.block_until_ready(score_cov_pallas(*args))
         star = 7
         k_star = Kc[star]
         u = jnp.asarray(np.linalg.solve(K, np.asarray(k_star))
@@ -242,8 +238,7 @@ def run_perslot_rescore(n_grid=(64, 256, 1024), n_cand=2000, dim=4, reps=5,
         schur = jnp.float32(var + noise) - k_star @ u
 
         def full_call():
-            return jax.block_until_ready(
-                ucb_scores_pallas(*args, jnp.float32(4.0)))
+            return jax.block_until_ready(score_cov_pallas(*args))
 
         def downdate_call():
             return jax.block_until_ready(var_downdate_pallas(

@@ -20,6 +20,11 @@ Because the ledger (including in-flight trials) lives in the core,
 the sync tuner: pending trials are re-dispatched on resume and the
 remaining proposals replay exactly.  Returns ``TunerResults`` like
 ``Tuner`` (dict-style access still works for legacy callers).
+
+Since ISSUE 6 the core is a bank-of-one view over a ``StudyLedger``
+(``repro.core.studybank``); nothing changes for a single async loop, but
+N concurrent tuning jobs can share one ``StudyBank`` and checkpoint the
+whole fleet with one atomic ``save``.
 """
 from __future__ import annotations
 

@@ -402,6 +402,196 @@ def fused_propose_pallas_pending(X: jax.Array, y: jax.Array,
 
 
 # --------------------------------------------------------------------------- #
+# StudyBank entry points: N studies, one dispatch
+# --------------------------------------------------------------------------- #
+# The bank ask runs as a STAGED pipeline of small jits rather than one
+# monolithic program, for two reasons measured on CPU:
+#
+#   * XLA:CPU emits a *scalar* ``expf`` per element whenever ``exp`` is
+#     fused with any producer (~8x the vectorized cost on a multi-million
+#     element Matern block); compiled standalone it vectorizes.
+#     ``lax.optimization_barrier`` does not split CPU fusion regions, so
+#     the only reliable seam is a jit boundary.  ``bank_exp`` therefore
+#     owns the ``exp(-s)`` evaluation and nothing else.
+#   * the stages have different invalidation cadences: factors and
+#     prescaled observations change only when a study's *observations*
+#     change, while candidates are fresh every ask.  Separate entry
+#     points let the ledger cache the slow stages (see
+#     ``StudyBank._dispatch_gp``) instead of recomputing the Cholesky of
+#     every study per ask.
+#
+# Staging is bitwise-safe: each stage reproduces the exact op sequence of
+# the fused single-study program (division by the lengthscales, the raw-d2
+# Matern polynomial, left-associated products, the hardened factor loop),
+# and f32 elementwise/dot ops produce identical bits whether or not they
+# share a fusion region — verified empirically against ``score_cov_ref``
+# and exercised by the bank-vs-single pick-parity suite.
+@jax.jit
+def bank_factors(X: jax.Array, mask: jax.Array, ls, var, noise):
+    """Masked-kernel Cholesky factors for every study: (B, na, d) ->
+    ``(L, Linv)`` at (B, na, na).  Deterministic from ledger state alone —
+    what makes a resumed bank replay bit-identical — and written back so
+    the fleet checkpoint carries ``L``/``L⁻¹``."""
+
+    def one(X, mask, ls, var, noise):
+        L = cholesky_masked(X, mask, ls, var, noise)
+        return L, scoring.linv_from_chol(L)
+
+    return jax.vmap(one)(X, mask, ls, var, noise)
+
+
+@jax.jit
+def bank_prescale_X(X: jax.Array, ls: jax.Array) -> jax.Array:
+    """Lengthscale-divide + lane-pad the observation block (B, na, d) ->
+    (B, na, dp); cached with the factors (same invalidation cadence)."""
+    d = X.shape[-1]
+    dp = max(8, -(-d // 8) * 8)
+
+    def one(X, ls):
+        return jnp.zeros((X.shape[0], dp), jnp.float32).at[:, :d].set(
+            X / ls)
+
+    return jax.vmap(one)(X, ls)
+
+
+@jax.jit
+def bank_prescale_C(C: jax.Array, ls: jax.Array) -> jax.Array:
+    """Prescale the fresh candidate block (B, S, d) -> (B, S, dp).
+
+    Unlike the single-study ``scoring.prescale`` there is NO padding of S
+    to a Pallas block multiple: the bank pipeline is pure jnp, every
+    per-candidate row is independent (distances, posterior moments, and
+    downdates are row-local; the argmax never saw padded rows, they were
+    masked unavailable), so padded rows were 4x wasted elementwise work at
+    small ``mc_samples`` with bitwise-identical picks either way."""
+    d = C.shape[-1]
+    dp = max(8, -(-d // 8) * 8)
+
+    def one(C, ls):
+        return jnp.zeros((C.shape[0], dp), jnp.float32).at[:, :d].set(
+            C / ls)
+
+    return jax.vmap(one)(C, ls)
+
+
+@functools.partial(jax.jit, static_argnames=("pend_cap",))
+def bank_absorb(Xs: jax.Array, y: jax.Array, mask: jax.Array,
+                L: jax.Array, Linv: jax.Array, P: jax.Array,
+                n_pending: jax.Array, n_obs: jax.Array,
+                ls, var, noise, pend_cap: int):
+    """Hallucinate each study's in-flight trials into its extended system
+    (prescales the raw pending block in-program).  Only dispatched when
+    some study has pending trials: with ``n_pending == 0`` the absorb
+    loop is an identity, so the no-pending steady state skips the stage
+    entirely (bitwise-safely) instead of paying the fori_loop."""
+    d = P.shape[-1]
+    dp = Xs.shape[-1]
+
+    def one(Xs, y, mask, L, Linv, P, n_pending, n_obs, ls, var, noise):
+        Ps = jnp.zeros((pend_cap, dp), jnp.float32).at[:, :d].set(P / ls)
+        return scoring.absorb_pending(Xs, y, mask, L, Linv, Ps, n_pending,
+                                      n_obs, var, noise, pend_cap)
+
+    return jax.vmap(one)(Xs, y, mask, L, Linv, P, n_pending, n_obs, ls,
+                         var, noise)
+
+
+@jax.jit
+def bank_dist(Cs: jax.Array, Xs: jax.Array):
+    """Pairwise squared distances and the Matern argument ``s = sqrt(5) r``
+    for every study: (B, Sp, dp) x (B, na, dp) -> (d2, s) at (B, Sp, na).
+    The polynomial uses the *raw* d2 (the clamp lives only under the
+    sqrt) — exactly ``kernels.gp_acquisition.ref.matern52``."""
+
+    def one(c, x):
+        d2 = (jnp.sum(c * c, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
+              - 2.0 * c @ x.T)
+        r = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        return d2, jnp.sqrt(5.0) * r
+
+    return jax.vmap(one)(Cs, Xs)
+
+
+@jax.jit
+def bank_exp(s: jax.Array) -> jax.Array:
+    """``exp(-s)`` and NOTHING else — the one stage that must stay alone
+    in its program so XLA:CPU emits the vectorized exponential."""
+    return jnp.exp(-s)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "S"))
+def bank_pick(d2: jax.Array, s: jax.Array, e: jax.Array, Cs: jax.Array,
+              y: jax.Array, mask: jax.Array, L: jax.Array,
+              Linv: jax.Array, var, noise, n_obs_eff: jax.Array,
+              domain_size: jax.Array, batch_size: int, S: int):
+    """Assemble the masked Matern block from the staged pieces, score
+    every candidate through the conditioning-hardened sum-of-squares form,
+    and run the GP-BUCB slot loop — one vmap'd dispatch for the bank.
+    ``n_obs_eff`` is ``n_obs + n_pending`` (the absorb-advanced counter).
+    Returns picked candidate indices (B, batch_size)."""
+
+    def one(d2, s, e, Cs, y, mask, L, Linv, var, noise, n_obs_eff):
+        K = var * (1.0 + s + (5.0 / 3.0) * d2) * e * mask[None, :]
+        alpha = scoring.kinv_matvec(Linv, y * mask)
+        mu = K @ alpha
+        t = K @ Linv.T
+        q = jnp.sum(t * t, axis=-1)
+        sig2 = jnp.maximum(var + noise - q, 1e-10)
+        return scoring.pick_downdate_from_scores(
+            Cs, S, mu, sig2, K, L, Linv, var, noise, n_obs_eff,
+            domain_size, batch_size, use_pallas=False)
+
+    return jax.vmap(one)(d2, s, e, Cs, y, mask, L, Linv, var, noise,
+                         n_obs_eff)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def fit_hypers_bank(X: jax.Array, y: jax.Array, mask: jax.Array,
+                    log_ls: jax.Array, log_var: jax.Array,
+                    log_noise: jax.Array, steps: int = 40):
+    """``fit_hypers`` for every study in a bank, one dispatch.
+
+    ``y`` is raw signed values at the bucket shape; standardization is
+    masked (mean/std over the ``mask``-active rows) and the frozen
+    ``(y_mean, y_std)`` pair is returned with the fitted log-hypers so the
+    ledger can standardize later observations exactly as the single-study
+    GP does between refits.  Warm-starts from the passed per-study
+    log-hypers — ledger rows that never fit carry the cold-init values, so
+    one fixed-``steps`` program serves cold and warm fits alike (a static
+    warm/cold split would double the cache entries per bucket).
+    """
+
+    def one(X, y, mask, lls, lv, ln):
+        n_eff = jnp.maximum(mask.sum(), 1.0)
+        mean = jnp.sum(y * mask) / n_eff
+        std = jnp.sqrt(jnp.sum(((y - mean) ** 2) * mask) / n_eff) + 1e-6
+        z = ((y - mean) / std) * mask
+        _, _, _, params = fit_hypers(
+            X, z, mask, steps=steps,
+            init={"log_ls": lls, "log_var": lv, "log_noise": ln})
+        return (params["log_ls"], params["log_var"], params["log_noise"],
+                mean, std)
+
+    return jax.vmap(one)(X, y, mask, log_ls, log_var, log_noise)
+
+
+# Every jitted bank entry point, by name: the retrace benchmark
+# (``benchmarks/multi_study.py``) audits each one's jit cache against the
+# number of shape buckets it was dispatched at — one compile per bucket,
+# ever, is the shape-bucketing contract.
+BANK_JITS = {
+    "bank_factors": bank_factors,
+    "bank_prescale_X": bank_prescale_X,
+    "bank_prescale_C": bank_prescale_C,
+    "bank_absorb": bank_absorb,
+    "bank_dist": bank_dist,
+    "bank_exp": bank_exp,
+    "bank_pick": bank_pick,
+    "fit_hypers_bank": fit_hypers_bank,
+}
+
+
+# --------------------------------------------------------------------------- #
 # Numpy-facing wrapper
 # --------------------------------------------------------------------------- #
 def _pad_to(n: int) -> int:

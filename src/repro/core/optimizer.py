@@ -28,10 +28,17 @@ records the loss without ever contaminating the GP.
 the GP's fit schedule (observation count + log-hyperparameters of the last
 full fit), so a run killed mid-flight — sync or async — resumes to the exact
 proposals of an uninterrupted one.
+
+Since the StudyBank refactor the array-shaped part of that state (encoded X
+rows, raw y, status, completion order, counters) lives in a ``StudyLedger``
+— a registered pytree of fixed-capacity arrays — and an ``AskTellOptimizer``
+is a *view* into one ledger row.  Stand-alone construction makes a private
+bank of one; ``StudyBank`` passes a shared ledger so N studies checkpoint
+as one pytree and ask through one vmap'd device program.  The single-study
+compute path (what ``ask`` dispatches) is unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from pathlib import Path
 from typing import Any, Dict, List, Optional
@@ -40,20 +47,94 @@ import numpy as np
 
 from repro.core.spaces import ParamSpace
 from repro.core.strategies import STRATEGIES
+from repro.core.studybank import (S_FAILED, S_OBSERVED, S_PENDING,
+                                  StudyLedger)
 
 PENDING = "pending"
 OBSERVED = "observed"
 FAILED = "failed"
 
+_STATUS_CODE = {PENDING: S_PENDING, OBSERVED: S_OBSERVED, FAILED: S_FAILED}
+_STATUS_NAME = {v: k for k, v in _STATUS_CODE.items()}
 
-@dataclasses.dataclass
+
 class Trial:
-    """One proposed configuration, tracked from ask to tell."""
-    id: int
-    params: Dict[str, Any]
-    status: str = PENDING
-    value: Optional[float] = None    # raw (un-signed) objective value
-    obs_seq: Optional[int] = None    # completion order (set at tell time)
+    """One proposed configuration, tracked from ask to tell.
+
+    When attached to a ``StudyLedger`` (every trial an optimizer hands out
+    is), ``status``/``value``/``obs_seq`` read through to the ledger arrays
+    — the trial object is a view, not a copy, so fleet checkpoints and the
+    Python API can never disagree.  Detached construction (no ledger) keeps
+    the old plain-record behaviour."""
+
+    __slots__ = ("id", "params", "_led", "_b",
+                 "_status", "_value", "_obs_seq")
+
+    def __init__(self, id: int, params: Dict[str, Any],
+                 status: str = PENDING, value: Optional[float] = None,
+                 obs_seq: Optional[int] = None, *,
+                 _ledger: Optional[StudyLedger] = None, _study: int = 0):
+        self.id = id
+        self.params = params
+        self._led = _ledger
+        self._b = _study
+        self._status = status
+        self._value = value
+        self._obs_seq = obs_seq
+
+    @property
+    def status(self) -> str:
+        if self._led is None:
+            return self._status
+        return _STATUS_NAME.get(int(self._led.status[self._b, self.id]),
+                                PENDING)
+
+    @status.setter
+    def status(self, v: str) -> None:
+        self._status = v
+        if self._led is not None:
+            code = _STATUS_CODE[v]
+            # entering/leaving the observed set changes the GP system:
+            # invalidate the bank's obs_stamp-keyed device cache.  Pending
+            # churn (ask / tell_failed) deliberately does NOT bump.
+            if (code == S_OBSERVED or
+                    int(self._led.status[self._b, self.id]) == S_OBSERVED):
+                self._led.obs_stamp += 1
+            self._led.status[self._b, self.id] = code
+
+    @property
+    def value(self) -> Optional[float]:
+        if self._led is None:
+            return self._value
+        if int(self._led.status[self._b, self.id]) != S_OBSERVED:
+            return None
+        return float(self._led.y[self._b, self.id])
+
+    @value.setter
+    def value(self, v: Optional[float]) -> None:
+        self._value = v
+        if self._led is not None and v is not None:
+            self._led.y[self._b, self.id] = float(v)
+            self._led.obs_stamp += 1
+
+    @property
+    def obs_seq(self) -> Optional[int]:
+        if self._led is None:
+            return self._obs_seq
+        s = int(self._led.obs_seq[self._b, self.id])
+        return None if s < 0 else s
+
+    @obs_seq.setter
+    def obs_seq(self, v: Optional[int]) -> None:
+        self._obs_seq = v
+        if self._led is not None and v is not None:
+            self._led.obs_seq[self._b, self.id] = int(v)
+            self._led.obs_stamp += 1
+
+    def __repr__(self) -> str:
+        return (f"Trial(id={self.id}, params={self.params!r}, "
+                f"status={self.status!r}, value={self.value!r}, "
+                f"obs_seq={self.obs_seq!r})")
 
 
 def _to_jsonable(cfg: Dict[str, Any]) -> Dict[str, Any]:
@@ -79,7 +160,9 @@ class AskTellOptimizer:
                  mc_samples: Optional[int] = None, fit_steps: int = 40,
                  use_pallas: bool = False, pallas_interpret: bool = True,
                  refit_every: int = 8,
-                 strategy_kwargs: Optional[Dict[str, Any]] = None):
+                 strategy_kwargs: Optional[Dict[str, Any]] = None,
+                 ledger: Optional[StudyLedger] = None,
+                 study_index: int = 0):
         self.space = (param_space if isinstance(param_space, ParamSpace)
                       else ParamSpace(param_space))
         if optimizer not in STRATEGIES:
@@ -98,14 +181,55 @@ class AskTellOptimizer:
         self.domain_size = domain_size or self.space.domain_size
         self.sign = sign                   # +1 maximize, -1 minimize
         self._rng = np.random.default_rng(seed)
+        # array-shaped state lives in the ledger (a private bank of one
+        # unless a StudyBank passed its shared ledger); params dicts and
+        # the trace stay on the view
+        self._led = (ledger if ledger is not None
+                     else StudyLedger(1, self.space.dim))
+        self._b = int(study_index)
+        if not 0 <= self._b < self._led.n_studies:
+            raise ValueError(f"study_index {study_index} out of range for "
+                             f"a {self._led.n_studies}-study ledger")
+        if self._led.dim != self.space.dim:
+            raise ValueError("ledger dim does not match the param space")
         self._trials: Dict[int, Trial] = {}   # insertion order == ask order
-        self._next_id = 0
-        self._ask_count = 0
-        self._obs_count = 0
-        self._n_failed = 0
         self._best_trace: List[float] = []    # raw best-so-far snapshots
         self._strat = None
         self._gp_snapshot = None   # pending restore from load_state_dict
+
+    # ---- ledger-backed counters (the view's scalars ARE the array row) ----
+    @property
+    def _next_id(self) -> int:
+        return int(self._led.n_trials[self._b])
+
+    @_next_id.setter
+    def _next_id(self, v: int) -> None:
+        self._led.ensure_capacity(v)
+        self._led.n_trials[self._b] = v
+
+    @property
+    def _ask_count(self) -> int:
+        return int(self._led.ask_count[self._b])
+
+    @_ask_count.setter
+    def _ask_count(self, v: int) -> None:
+        self._led.ask_count[self._b] = v
+
+    @property
+    def _obs_count(self) -> int:
+        return int(self._led.obs_count[self._b])
+
+    @_obs_count.setter
+    def _obs_count(self, v: int) -> None:
+        self._led.obs_count[self._b] = v
+
+    @property
+    def _n_failed(self) -> int:
+        return int(self._led.n_failed[self._b])
+
+    @_n_failed.setter
+    def _n_failed(self, v: int) -> None:
+        self._led.n_failed[self._b] = v
 
     # ------------------------------------------------------------- ledger
     def trials(self) -> List[Trial]:
@@ -190,11 +314,25 @@ class AskTellOptimizer:
             idx = strat.propose(X, y, C, n, seed=seed, pending=P)
             chosen = [cands[i] for i in idx]
         self._ask_count += 1
+        return self._register_asked(chosen)
+
+    def _register_asked(self, chosen: List[Dict[str, Any]],
+                        enc: Optional[np.ndarray] = None) -> List[Trial]:
+        """Enter proposed configs into the ledger as pending trials.
+        ``enc`` (their encoded rows) avoids a re-encode when the caller —
+        the bank's batched ask — already has them."""
+        if enc is None:
+            enc = self.space.encode(list(chosen))
+        led, b = self._led, self._b
         out = []
-        for p in chosen:
-            t = Trial(self._next_id, dict(p))
-            self._trials[t.id] = t
-            self._next_id += 1
+        for p, row in zip(chosen, enc):
+            tid = self._next_id
+            self._next_id = tid + 1          # grows ledger capacity too
+            led.X[b, tid, :] = row
+            led.status[b, tid] = S_PENDING
+            led.obs_seq[b, tid] = -1
+            t = Trial(tid, dict(p), _ledger=led, _study=b)
+            self._trials[tid] = t
             out.append(t)
         return out
 
@@ -221,6 +359,9 @@ class AskTellOptimizer:
         t.value = v
         t.obs_seq = self._obs_count
         self._obs_count += 1
+        # drivers may rebind t.params to the exact config the objective ran
+        # (the batch tuner does) — re-encode so the ledger row matches
+        self._led.X[self._b, t.id, :] = self.space.encode([t.params])[0]
         return t
 
     def tell_failed(self, trial_id: int) -> Trial:
@@ -234,9 +375,13 @@ class AskTellOptimizer:
         """Observe a configuration that never went through ``ask`` (an
         objective returning params outside its batch — the legacy contract
         lets it).  Enters the ledger directly as observed/failed."""
-        t = Trial(self._next_id, dict(params))
-        self._trials[t.id] = t
-        self._next_id += 1
+        led, b = self._led, self._b
+        tid = self._next_id
+        self._next_id = tid + 1
+        t = Trial(tid, dict(params), _ledger=led, _study=b)
+        self._trials[tid] = t
+        led.X[b, tid, :] = self.space.encode([t.params])[0]
+        led.status[b, tid] = S_PENDING
         v = float(value)
         if np.isfinite(v):
             t.status = OBSERVED
@@ -299,16 +444,27 @@ class AskTellOptimizer:
         }
 
     def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        led, b = self._led, self._b
+        led.reset_study(b)
         self._next_id = sd["next_id"]
         self._ask_count = sd["ask_count"]
         self._n_failed = sd["n_failed"]
         self.sign = sd.get("sign", 1.0)
         self._best_trace = list(sd.get("best_trace", []))
         self._trials = {}
-        for rec in sd["trials"]:
-            self._trials[rec["id"]] = Trial(rec["id"], rec["params"],
-                                            rec["status"], rec["value"],
-                                            rec.get("obs_seq"))
+        recs = sd["trials"]
+        if recs:
+            enc = self.space.encode([rec["params"] for rec in recs])
+        for i, rec in enumerate(recs):
+            tid = rec["id"]
+            t = Trial(tid, rec["params"], _ledger=led, _study=b)
+            led.X[b, tid, :] = enc[i]
+            led.status[b, tid] = _STATUS_CODE[rec["status"]]
+            if rec["value"] is not None:
+                led.y[b, tid] = float(rec["value"])
+            seq = rec.get("obs_seq")
+            led.obs_seq[b, tid] = -1 if seq is None else int(seq)
+            self._trials[tid] = t
         self._obs_count = 1 + max(
             (t.obs_seq for t in self._trials.values()
              if t.obs_seq is not None), default=-1)

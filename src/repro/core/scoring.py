@@ -271,10 +271,30 @@ def pick_downdate_loop(Cs: jax.Array, Xs: jax.Array, S: int, y: jax.Array,
     # monkeypatches ``scoring.posterior_scores`` and must see this call
     import repro.core.scoring as scoring
 
-    Sp = Cs.shape[0]
     mu, sig2, Kc, _ = scoring.posterior_scores(
         Cs, Xs, y, mask, Linv, var, noise, use_pallas=use_pallas,
         block_s=block_s, interpret=interpret)
+    return pick_downdate_from_scores(
+        Cs, S, mu, sig2, Kc, L, Linv, var, noise, n_obs, domain_size,
+        batch_size, use_pallas=use_pallas, block_s=block_s,
+        interpret=interpret)
+
+
+def pick_downdate_from_scores(Cs: jax.Array, S: int, mu: jax.Array,
+                              sig2: jax.Array, Kc: jax.Array, L: jax.Array,
+                              Linv: jax.Array, var, noise,
+                              n_obs: jax.Array, domain_size: jax.Array,
+                              batch_size: int, *, use_pallas: bool,
+                              block_s: int = 256,
+                              interpret: bool = True) -> jax.Array:
+    """The slot loop of ``pick_downdate_loop`` given an already-scored
+    candidate set — op-for-op the same program, split out so the staged
+    bank pipeline (``gp.bank_pick``) can feed scores whose Matern ``exp``
+    was evaluated in its own jit (XLA:CPU scalarizes ``exp`` whenever it
+    is fused with any producer; standalone it vectorizes)."""
+    import repro.core.scoring as scoring
+
+    Sp = Cs.shape[0]
 
     def pick(b, sig2, avail, picks):
         beta = adaptive_beta_dev(n_obs + b, domain_size)

@@ -66,6 +66,18 @@ class _Param:
             self.dist = v
             self.dims = 1
             self._ecdf_ref = None   # lazy, for sampling-only distributions
+            # Frozen scipy uniform gets a closed-form columnar fast path:
+            # rvs == rng.uniform(n)*scale + loc and cdf == (x-loc)/scale
+            # bitwise (scipy evaluates exactly these expressions), so the
+            # bank's 10^4-10^5-candidate draws skip scipy's per-call arg
+            # machinery without perturbing the RNG stream or the encoding.
+            self._uniform_ls = None
+            try:
+                if getattr(getattr(v, "dist", None), "name", "") == "uniform":
+                    _, loc, scale = v.dist._parse_args(*v.args, **v.kwds)
+                    self._uniform_ls = (float(loc), float(scale))
+            except Exception:
+                self._uniform_ls = None
         elif isinstance(v, range):
             self.kind = "range"
             self.choices = np.array(list(v))
@@ -98,6 +110,19 @@ class _Param:
             return [self.choices[i] for i in idx]
         return [self.value] * n
 
+    def sample_array(self, n: int, rng: np.random.Generator):
+        """Columnar ``sample``: same RNG stream, but numeric kinds return the
+        ndarray itself instead of a list of Python scalars (the list round
+        trip dominates host time at bank scale: B*mc rows per ask)."""
+        if self.kind == "dist":
+            if self._uniform_ls is not None:
+                loc, scale = self._uniform_ls
+                return rng.uniform(size=n) * scale + loc
+            return np.asarray(self.dist.rvs(size=n, random_state=rng))
+        if self.kind == "range":
+            return rng.choice(self.choices, size=n)
+        return self.sample(n, rng)   # cat / const stay object lists
+
     def _ecdf(self) -> np.ndarray:
         """Persistent empirical CDF for sampling-only distributions.
 
@@ -119,6 +144,11 @@ class _Param:
         n = len(values)
         if self.kind == "dist":
             v = np.asarray(values, dtype=float)
+            if self._uniform_ls is not None:
+                loc, scale = self._uniform_ls
+                enc = np.nan_to_num(np.clip((v - loc) / scale, 0.0, 1.0),
+                                    nan=0.5)
+                return enc.reshape(n, 1)
             if hasattr(self.dist, "cdf"):
                 with np.errstate(all="ignore"):
                     enc = np.nan_to_num(
@@ -164,6 +194,44 @@ class ParamSpace:
     def sample(self, n: int, rng: np.random.Generator) -> List[Dict]:
         cols = {p.name: p.sample(n, rng) for p in self.params}
         return [{k: cols[k][i] for k in cols} for i in range(n)]
+
+    # ---- columnar sampling (StudyBank's batched-candidate fast path) ----
+    # Draws the *same* RNG stream as ``sample(n, rng)`` (one per-param draw
+    # each, in declaration order) but skips materializing n row dicts, so a
+    # bank ask can sample B*n_mc candidates and encode them in one pass;
+    # only the few winning rows ever become config dicts (``config_at``).
+    def sample_columns(self, n: int,
+                       rng: np.random.Generator) -> Dict[str, Any]:
+        return {p.name: p.sample_array(n, rng) for p in self.params}
+
+    def encode_columns(self, cols: Dict[str, List[Any]],
+                       n: int) -> np.ndarray:
+        blocks = [p.encode(cols[p.name]) for p in self.params if p.dims]
+        return (np.concatenate(blocks, axis=1) if blocks
+                else np.zeros((n, 0)))
+
+    def config_at(self, cols: Dict[str, Any], i: int) -> Dict:
+        # .item() unwraps ndarray columns to Python scalars so trial params
+        # stay JSON-serializable (state_dict carries them verbatim)
+        return {p.name: (cols[p.name][i].item()
+                         if isinstance(cols[p.name], np.ndarray)
+                         else cols[p.name][i])
+                for p in self.params}
+
+    def configs_at(self, cols: Dict[str, Any], idx) -> List[Dict]:
+        """Batched ``config_at``: one fancy-index + ``tolist`` per column
+        instead of a per-row dictcomp with per-scalar ``.item()`` calls
+        (the bank materializes B*n winner configs per ask)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        names = [p.name for p in self.params]
+        pulled = []
+        for p in self.params:
+            c = cols[p.name]
+            if isinstance(c, np.ndarray):
+                pulled.append(c[idx].tolist())   # tolist -> Python scalars
+            else:
+                pulled.append([c[i] for i in idx])
+        return [dict(zip(names, row)) for row in zip(*pulled)]
 
     def encode(self, configs: List[Dict]) -> np.ndarray:
         if not configs:

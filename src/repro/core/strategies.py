@@ -34,6 +34,13 @@ from repro.core.kmeans import kmeans_assign
 SCORERS = ("chol", "kinv_jnp", "kinv_pallas")
 
 
+def n_top_candidates(S: int, batch_size: int, top_frac: float) -> int:
+    """Top-quantile size for the clustering pipeline.  Module-level so the
+    StudyBank's batched clustering ask computes the exact same (static)
+    ``n_top`` as the single-study strategy."""
+    return min(max(batch_size * 4, int(S * top_frac)), S)
+
+
 class BaseStrategy:
     """A strategy consumes encoded observations + candidates and returns
     pick indices.  ``propose`` additionally accepts ``pending`` — the
@@ -256,7 +263,7 @@ class ClusteringStrategy(BaseStrategy):
         self.top_frac = top_frac
 
     def _n_top(self, S: int, batch_size: int) -> int:
-        return min(max(batch_size * 4, int(S * self.top_frac)), S)
+        return n_top_candidates(S, batch_size, self.top_frac)
 
     def propose(self, X, y, candidates, batch_size, seed=0, pending=None):
         import jax

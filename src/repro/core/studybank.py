@@ -1,0 +1,664 @@
+"""StudyBank: optimizer state as a pytree of arrays (multi-tenant asks).
+
+Mango frames HPO as a production service (paper §1/§2.4); Tune and
+Auptimizer make the same point — a tuning platform hosts *many* concurrent
+studies, not one notebook loop.  This module gives the engine that shape:
+
+  * ``StudyLedger`` — a registered pytree of fixed-capacity numpy arrays
+    holding every study's trial ledger (encoded X rows, raw y, status,
+    completion order), counters, per-study RNG state, GP hyperparameter /
+    fit-schedule state, and the last Cholesky factors ``L``/``L⁻¹``.
+    ``AskTellOptimizer`` is a *view* into one row of a ledger (a bank of
+    one by default), so the single-study API is unchanged while the state
+    itself is array-shaped.
+  * ``StudyBank`` — N studies over one ledger.  ``ask_all`` gathers the
+    bank into shape-bucketed device buffers (power-of-2 trial capacity, so
+    a growing study re-enters a cached compiled program instead of
+    retracing) and serves every study in one vmap'd pass: the staged
+    ``gp.bank_*`` pipeline, ``tpe.fused_tpe_propose_bank``, or
+    ``acquisition.fused_cluster_propose_bank``.  Observation-dependent
+    device state (gather, factors, standardization) is cached on the
+    ledger's ``obs_stamp``, so ask/tell_failed churn never recomputes a
+    Cholesky.
+  * One-write fleet checkpoints — ``save`` serializes the whole ledger
+    pytree (plus a JSON meta block for params dicts / RNG streams) as a
+    single ``.npz`` write; ``load`` restores every study mid-flight.
+
+Bucketing contract: device buffers are padded to ``pow2(max(16, ...))``
+rows with ``n_obs``/``n_pending`` carried as masked ranks, so within a
+bucket the compiled program is reused ask after ask (the
+``steady_state_retrace`` bench row asserts zero retraces across a
+64→1024-observation growth sweep, compiles at bucket edges aside).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# trial-status codes (ledger ``status`` array; 0 = empty slot)
+S_EMPTY, S_PENDING, S_OBSERVED, S_FAILED = 0, 1, 2, 3
+
+_U64 = np.uint64
+_MASK64 = (1 << 64) - 1
+
+
+def _pow2(n: int) -> int:
+    p = 16
+    while p < n:
+        p *= 2
+    return p
+
+
+def pack_rng_state(rng: np.random.Generator) -> np.ndarray:
+    """Pack a PCG64 Generator's full state into 6 uint64 words
+    (state lo/hi, inc lo/hi, has_uint32, uinteger) for array storage."""
+    st = rng.bit_generator.state
+    s, inc = st["state"]["state"], st["state"]["inc"]
+    return np.array([s & _MASK64, (s >> 64) & _MASK64,
+                     inc & _MASK64, (inc >> 64) & _MASK64,
+                     st["has_uint32"], st["uinteger"]], dtype=_U64)
+
+
+def unpack_rng_state(words: np.ndarray) -> np.random.Generator:
+    w = [int(x) for x in words]
+    rng = np.random.default_rng()
+    rng.bit_generator.state = {
+        "bit_generator": "PCG64",
+        "state": {"state": w[0] | (w[1] << 64), "inc": w[2] | (w[3] << 64)},
+        "has_uint32": w[4], "uinteger": w[5]}
+    return rng
+
+
+class StudyLedger:
+    """Pytree-of-arrays state for ``n_studies`` concurrent studies.
+
+    Everything array-shaped lives here; params *dicts* (needed to call the
+    user's objective) stay on the owning optimizer views.  Trial slot index
+    == trial id (ids are dense), so gathers are plain fancy indexing.
+    Capacities grow by doubling from 16 — bank-wide, so every study in the
+    bank always shares one bucket shape.
+    """
+
+    # leaf order is the pytree/checkpoint contract
+    ARRAY_FIELDS = (
+        "X", "y", "status", "obs_seq",
+        "n_trials", "ask_count", "obs_count", "n_failed",
+        "log_ls", "log_var", "log_noise", "have_fit", "n_fit",
+        "y_mean", "y_std", "L", "Linv", "rng_state",
+    )
+
+    # Monotone observation stamp: bumped by every mutation that can change
+    # the *observed* system (tells, value/order writes, hyper refits, study
+    # resets, checkpoint loads) — but NOT by pending-only traffic
+    # (ask/tell_failed), which is regathered fresh each ask.  The bank's
+    # staged GP dispatch keys its device cache (prescaled observations,
+    # Cholesky factors, standardized y, hypers) on this stamp, so the
+    # no-new-observations steady state skips the Cholesky entirely.  A
+    # class attribute (not an ``__init__`` field, not a pytree leaf, never
+    # serialized) so unflattened/restored ledgers start valid at 0.
+    obs_stamp = 0
+
+    def __init__(self, n_studies: int, dim: int, capacity: int = 16,
+                 gp_capacity: int = 16):
+        if n_studies < 1:
+            raise ValueError("n_studies must be >= 1")
+        B, d = int(n_studies), int(dim)
+        cap = _pow2(max(16, capacity))
+        self.n_studies, self.dim = B, d
+        # ---- trial ledger -------------------------------------------------
+        self.X = np.zeros((B, cap, d), np.float32)   # encoded rows by id
+        self.y = np.zeros((B, cap), np.float64)      # raw objective values
+        self.status = np.zeros((B, cap), np.int8)
+        self.obs_seq = np.full((B, cap), -1, np.int32)
+        self.n_trials = np.zeros((B,), np.int64)     # == next trial id
+        self.ask_count = np.zeros((B,), np.int64)
+        self.obs_count = np.zeros((B,), np.int64)
+        self.n_failed = np.zeros((B,), np.int64)
+        # ---- GP hypers + fit schedule (cold rows carry the cold-fit init
+        # values, so a bank fit can always warm-start from these arrays) ----
+        self.log_ls = np.full((B, d), np.log(0.5), np.float32)
+        self.log_var = np.zeros((B,), np.float32)
+        self.log_noise = np.full((B,), np.log(1e-2), np.float32)
+        self.have_fit = np.zeros((B,), np.int8)
+        self.n_fit = np.zeros((B,), np.int64)
+        self.y_mean = np.zeros((B,), np.float32)
+        self.y_std = np.ones((B,), np.float32)
+        # ---- last Cholesky factors from the bank propose program ----------
+        gcap = _pow2(max(16, gp_capacity))
+        eye = np.eye(gcap, dtype=np.float32)
+        self.L = np.tile(eye, (B, 1, 1))
+        self.Linv = np.tile(eye, (B, 1, 1))
+        # ---- per-study RNG streams (synced from the views at save time) ---
+        self.rng_state = np.zeros((B, 6), _U64)
+
+    # ------------------------------------------------------------ capacity
+    @property
+    def capacity(self) -> int:
+        return self.X.shape[1]
+
+    @property
+    def gp_capacity(self) -> int:
+        return self.L.shape[1]
+
+    def ensure_capacity(self, n: int) -> None:
+        cap = self.capacity
+        if n <= cap:
+            return
+        new = _pow2(n)
+        B, d = self.n_studies, self.dim
+        X = np.zeros((B, new, d), np.float32)
+        X[:, :cap] = self.X
+        y = np.zeros((B, new), np.float64)
+        y[:, :cap] = self.y
+        status = np.zeros((B, new), np.int8)
+        status[:, :cap] = self.status
+        obs_seq = np.full((B, new), -1, np.int32)
+        obs_seq[:, :cap] = self.obs_seq
+        self.X, self.y, self.status, self.obs_seq = X, y, status, obs_seq
+
+    def ensure_gp_capacity(self, n: int) -> None:
+        gcap = self.gp_capacity
+        if n <= gcap:
+            return
+        new = _pow2(n)
+        B = self.n_studies
+        eye = np.eye(new, dtype=np.float32)
+        L = np.tile(eye, (B, 1, 1))
+        L[:, :gcap, :gcap] = self.L
+        Linv = np.tile(eye, (B, 1, 1))
+        Linv[:, :gcap, :gcap] = self.Linv
+        self.L, self.Linv = L, Linv
+
+    # ----------------------------------------------------------- per-study
+    def reset_study(self, b: int) -> None:
+        """Clear one study's row back to the cold state (load target)."""
+        self.obs_stamp += 1
+        self.X[b] = 0.0
+        self.y[b] = 0.0
+        self.status[b] = S_EMPTY
+        self.obs_seq[b] = -1
+        self.n_trials[b] = self.ask_count[b] = 0
+        self.obs_count[b] = self.n_failed[b] = 0
+        self.log_ls[b] = np.log(0.5)
+        self.log_var[b] = 0.0
+        self.log_noise[b] = np.log(1e-2)
+        self.have_fit[b] = 0
+        self.n_fit[b] = 0
+        self.y_mean[b], self.y_std[b] = 0.0, 1.0
+        g = self.gp_capacity
+        self.L[b] = np.eye(g, dtype=np.float32)
+        self.Linv[b] = np.eye(g, dtype=np.float32)
+        self.rng_state[b] = 0
+
+    def n_observed(self) -> np.ndarray:
+        return (self.status == S_OBSERVED).sum(axis=1)
+
+    def n_pending(self) -> np.ndarray:
+        return (self.status == S_PENDING).sum(axis=1)
+
+    def obs_ids(self, b: int) -> np.ndarray:
+        """Observed trial ids of study ``b`` in completion (tell) order."""
+        ids = np.nonzero(self.status[b] == S_OBSERVED)[0]
+        return ids[np.argsort(self.obs_seq[b, ids], kind="stable")]
+
+    def pending_ids(self, b: int) -> np.ndarray:
+        return np.nonzero(self.status[b] == S_PENDING)[0]
+
+
+def _ledger_flatten(led: StudyLedger):
+    return (tuple(getattr(led, f) for f in StudyLedger.ARRAY_FIELDS),
+            (led.n_studies, led.dim))
+
+
+def _ledger_unflatten(aux, leaves) -> StudyLedger:
+    led = object.__new__(StudyLedger)
+    led.n_studies, led.dim = aux
+    for f, v in zip(StudyLedger.ARRAY_FIELDS, leaves):
+        setattr(led, f, v)
+    return led
+
+
+jax.tree_util.register_pytree_node(
+    StudyLedger, _ledger_flatten, _ledger_unflatten)
+
+
+class StudyBank:
+    """N independent studies over one ``StudyLedger``; one device dispatch
+    per ``ask_all``.
+
+    Every study shares the parameter space and strategy type (a bank is a
+    homogeneous fleet — heterogeneous fleets are just multiple banks) but
+    owns its RNG stream, sign, counters and GP state, so per-study results
+    are reproducible independent of its bankmates' *values* (bucket shapes
+    are shared, proposals are not).
+    """
+
+    def __init__(self, param_space, n_studies: int, *,
+                 optimizer: str = "bayesian", seed: int = 0,
+                 sign: float = 1.0, domain_size: Optional[float] = None,
+                 mc_samples: Optional[int] = None, fit_steps: int = 40,
+                 use_pallas: bool = False, pallas_interpret: bool = True,
+                 refit_every: int = 8,
+                 strategy_kwargs: Optional[Dict[str, Any]] = None):
+        from repro.core.optimizer import AskTellOptimizer
+        from repro.core.spaces import ParamSpace
+        self.space = (param_space if isinstance(param_space, ParamSpace)
+                      else ParamSpace(param_space))
+        self.optimizer = optimizer
+        self.mc_samples = mc_samples
+        self.fit_steps = fit_steps
+        self.use_pallas = use_pallas
+        self.pallas_interpret = pallas_interpret
+        self.refit_every = refit_every
+        self.strategy_kwargs = dict(strategy_kwargs or {})
+        self.seed = seed
+        self.ledger = StudyLedger(n_studies, self.space.dim)
+        self._gp_cache = None   # obs_stamp-keyed device state (staged ask)
+        # bank-wide candidate stream: one flat draw of B*n_mc candidates per
+        # ask_all, independent of the per-study streams
+        self._rng = np.random.default_rng(seed)
+        self.studies: List[AskTellOptimizer] = [
+            AskTellOptimizer(self.space, optimizer=optimizer,
+                             seed=seed + 1 + i, sign=sign,
+                             domain_size=domain_size, mc_samples=mc_samples,
+                             fit_steps=fit_steps, use_pallas=use_pallas,
+                             pallas_interpret=pallas_interpret,
+                             refit_every=refit_every,
+                             strategy_kwargs=strategy_kwargs,
+                             ledger=self.ledger, study_index=i)
+            for i in range(n_studies)]
+
+    # -------------------------------------------------------------- basics
+    @property
+    def n_studies(self) -> int:
+        return self.ledger.n_studies
+
+    def study(self, i: int):
+        return self.studies[i]
+
+    def tell(self, study: int, trial_id: int, value: float):
+        return self.studies[study].tell(trial_id, value)
+
+    def tell_failed(self, study: int, trial_id: int):
+        return self.studies[study].tell_failed(trial_id)
+
+    # ------------------------------------------------------------- ask_all
+    def ask_all(self, n: int = 1) -> List[list]:
+        """Propose ``n`` new trials for every study.
+
+        Studies still in the random phase (< 2 observations, or a random
+        bank) ask through their own view; every GP/TPE-phase study is
+        gathered into one shape-bucketed device batch and served by a
+        single vmap'd fused program.  Returns ``[trials_of_study_0, ...]``.
+        """
+        if n < 1:
+            raise ValueError("ask_all(n) requires n >= 1")
+        led = self.ledger
+        B = led.n_studies
+        if self.optimizer == "random":
+            return [v.ask(n) for v in self.studies]
+        n_obs = led.n_observed()
+        device = n_obs >= 2
+        out: List[Optional[list]] = [None] * B
+        for b in np.nonzero(~device)[0]:
+            out[b] = self.studies[int(b)].ask(n)
+        if not device.any():
+            return out
+        picks = self._ask_device(n, n_obs)
+        # bulk registration: one fancy-indexed ledger write per field for
+        # every device-phase study (the per-view ``_register_asked`` loop
+        # was the last O(B) Python/ledger hot spot in the steady state);
+        # ids stay dense (slot == trial id), statuses/obs_seq identical to
+        # the per-view path.
+        from repro.core.optimizer import Trial
+        dev = np.array(sorted(picks))
+        tids0 = led.n_trials[dev].astype(np.int64)
+        led.ensure_capacity(int((tids0 + n).max()))
+        rows = dev[:, None]
+        slot = tids0[:, None] + np.arange(n)[None, :]
+        led.X[rows, slot] = np.stack([picks[int(b)][1] for b in dev])
+        led.status[rows, slot] = S_PENDING
+        led.obs_seq[rows, slot] = -1
+        led.n_trials[dev] = tids0 + n
+        led.ask_count[dev] += 1
+        for i, b in enumerate(dev):
+            b = int(b)
+            v = self.studies[b]
+            trials = []
+            for j, p in enumerate(picks[b][0]):
+                t = Trial(int(tids0[i]) + j, dict(p), _ledger=led,
+                          _study=b)
+                v._trials[t.id] = t
+                trials.append(t)
+            out[b] = trials
+        return out
+
+    def _ask_device(self, n: int, n_obs: np.ndarray):
+        """One staged dispatch for the whole bank; returns
+        ``{study: (configs, encoded_rows)}`` for every GP-phase study."""
+        led, space = self.ledger, self.space
+        B, d = led.n_studies, led.dim
+        k_obs = n_obs.astype(np.int32)
+        k_pend = led.n_pending().astype(np.int32)
+        pend_cap = max(4, -(-int(k_pend.max()) // 4) * 4)
+        na = _pow2(max(16, int(k_obs.max()) + pend_cap + n))
+        n_mc = self.mc_samples or self.space.mc_samples(n)
+        # one columnar draw for the whole bank (no per-candidate dicts)
+        cols = space.sample_columns(B * n_mc, self._rng)
+        Cflat = space.encode_columns(cols, B * n_mc)
+        C = np.asarray(Cflat, np.float32).reshape(B, n_mc, d)
+        if self.optimizer == "tpe":
+            Xd, yraw, mask = self._gather_obs(k_obs, na)
+            Pd = self._gather_pend(k_pend, pend_cap)
+            idx = self._dispatch_tpe(Xd, yraw, mask, Pd, C, k_obs, k_pend,
+                                     n, na)
+        else:
+            idx = self._dispatch_gp(C, k_obs, k_pend, n, na, pend_cap)
+        idx = np.asarray(idx)
+        dev = np.nonzero(n_obs >= 2)[0]
+        flat = (dev[:, None] * n_mc + idx[dev]).astype(np.int64)  # (k, n)
+        cfgs = self.space.configs_at(cols, flat.ravel())
+        enc = Cflat[flat.ravel()].reshape(len(dev), -1, Cflat.shape[1])
+        return {int(b): (cfgs[i * n:(i + 1) * n], enc[i])
+                for i, b in enumerate(dev)}
+
+    def _gather_obs(self, k_obs: np.ndarray, na: int):
+        """Masked-rank observation gather at the bucket shape, vectorized
+        over the bank: one stable argsort of the completion order (empty /
+        pending / failed slots pushed past the horizon by a sentinel)
+        replaces the per-study ``obs_ids`` fancy-indexing loop.  Returns
+        ``(Xd (B, na, d), yraw signed (B, na), mask (B, na))``."""
+        led = self.ledger
+        B, d, cap = led.n_studies, led.dim, led.capacity
+        m = min(cap, na)
+        seq = np.where(led.status == S_OBSERVED, led.obs_seq,
+                       np.iinfo(np.int32).max)
+        order = np.argsort(seq, axis=1, kind="stable")[:, :m]
+        rows = np.arange(B)[:, None]
+        valid = np.arange(m)[None, :] < k_obs[:, None]
+        sign = np.array([v.sign for v in self.studies])[:, None]
+        Xd = np.zeros((B, na, d), np.float32)
+        yraw = np.zeros((B, na), np.float32)     # signed, unstandardized
+        mask = np.zeros((B, na), np.float32)
+        Xd[:, :m] = np.where(valid[..., None], led.X[rows, order], 0.0)
+        yraw[:, :m] = np.where(valid, sign * led.y[rows, order],
+                               0.0).astype(np.float32)
+        mask[:, :m] = valid
+        return Xd, yraw, mask
+
+    def _gather_pend(self, k_pend: np.ndarray, pend_cap: int) -> np.ndarray:
+        """In-flight rows at the ``pend_cap`` shape (ascending trial id,
+        like ``pending_ids``), vectorized over the bank.  Never cached —
+        pending churn happens every ask/tell_failed."""
+        led = self.ledger
+        B, d, cap = led.n_studies, led.dim, led.capacity
+        Pd = np.zeros((B, pend_cap, d), np.float32)
+        if int(k_pend.max()):
+            ids = np.where(led.status == S_PENDING,
+                           np.arange(cap)[None, :], np.iinfo(np.int32).max)
+            order = np.argsort(ids, axis=1, kind="stable")[:, :pend_cap]
+            rows = np.arange(B)[:, None]
+            valid = np.arange(pend_cap)[None, :] < k_pend[:, None]
+            Pd[:] = np.where(valid[..., None], led.X[rows, order], 0.0)
+        return Pd
+
+    def _fit_if_due(self, Xd, yraw, mask, k_obs):
+        """Count-based bank fit schedule: (re)fit hypers for every study
+        whose observation count advanced ``refit_every`` past its last fit
+        (or that never fit).  The fit program always runs over the full
+        bank at the bucket shape — selective write-back keeps non-due
+        studies' frozen hypers (and frozen y standardization) bit-stable.
+        """
+        led = self.ledger
+        due = ((led.have_fit == 0) |
+               (k_obs.astype(np.int64) - led.n_fit >= self.refit_every))
+        due &= k_obs >= 2
+        if not due.any():
+            return
+        from repro.core import gp as gp_lib
+        lls, lv, ln, ym, ys = gp_lib.fit_hypers_bank(
+            Xd, yraw, mask, led.log_ls, led.log_var, led.log_noise,
+            steps=self.fit_steps)
+        sel = np.nonzero(due)[0]
+        led.log_ls[sel] = np.asarray(lls)[sel]
+        led.log_var[sel] = np.asarray(lv)[sel]
+        led.log_noise[sel] = np.asarray(ln)[sel]
+        led.y_mean[sel] = np.asarray(ym)[sel]
+        led.y_std[sel] = np.asarray(ys)[sel]
+        led.n_fit[sel] = k_obs[sel]
+        led.have_fit[sel] = 1
+        led.obs_stamp += 1    # new hypers/standardization: factors stale
+
+    def _dispatch_gp(self, C, k_obs, k_pend, n, na, pend_cap):
+        """The staged bank ask (see the stage comments in ``core.gp``).
+
+        Stages whose inputs depend only on *observations* — the masked
+        gather, frozen standardization, hypers, prescale, Cholesky factors
+        — are cached on the ledger's ``obs_stamp`` + bucket shape, so the
+        ask/tell_failed steady state pays only the candidate-dependent
+        stages (prescale-C, distances, exp, pick) plus a pending absorb
+        when something is actually in flight.
+        """
+        from repro.core import acquisition as acq_lib
+        from repro.core import gp as gp_lib
+        led = self.ledger
+        signs = tuple(v.sign for v in self.studies)
+        due = ((led.have_fit == 0) |
+               (k_obs.astype(np.int64) - led.n_fit >= self.refit_every))
+        due &= k_obs >= 2
+        cache = self._gp_cache
+        key = (led.obs_stamp, na, signs)
+        clustering = self.optimizer == "clustering"
+        if clustering or due.any() or cache is None or cache["key"] != key:
+            Xd, yraw, mask = self._gather_obs(k_obs, na)
+            self._fit_if_due(Xd, yraw, mask, k_obs)
+            key = (led.obs_stamp, na, signs)
+        dom = float(self.studies[0].domain_size)
+        if clustering:
+            # frozen standardization, exactly the single-study GP contract
+            z = (yraw - led.y_mean[:, None]) / led.y_std[:, None]
+            z = (z * mask).astype(np.float32)
+            ls = np.exp(led.log_ls).astype(np.float32)
+            var = np.exp(led.log_var).astype(np.float32)
+            noise = (np.exp(led.log_noise) + 1e-5).astype(np.float32)
+            Pd = self._gather_pend(k_pend, pend_cap)
+            from repro.core.strategies import n_top_candidates
+            top_frac = self.strategy_kwargs.get("top_frac", 0.2)
+            n_top = n_top_candidates(C.shape[1], n, top_frac)
+            keys = np.stack([
+                np.asarray(jax.random.PRNGKey(int(led.ask_count[b])))
+                for b in range(led.n_studies)])
+            idx, L, Linv = acq_lib.fused_cluster_propose_bank(
+                Xd, z, mask, Pd, k_pend.astype(np.float32), C, ls, var,
+                noise, k_obs.astype(np.float32), np.float32(dom), keys,
+                batch_size=n, n_top=n_top, pend_cap=pend_cap,
+                use_pallas=False, interpret=self.pallas_interpret)
+            led.ensure_gp_capacity(na)
+            led.L[:, :na, :na] = np.asarray(L)
+            led.Linv[:, :na, :na] = np.asarray(Linv)
+            return idx
+        cache = self._gp_cache
+        if cache is None or cache["key"] != key:
+            # observation-dependent stages (rebuilt only when obs changed)
+            z = (yraw - led.y_mean[:, None]) / led.y_std[:, None]
+            z = (z * mask).astype(np.float32)
+            ls = np.exp(led.log_ls).astype(np.float32)
+            var = np.exp(led.log_var).astype(np.float32)
+            noise = (np.exp(led.log_noise) + 1e-5).astype(np.float32)
+            L, Linv = gp_lib.bank_factors(Xd, mask, ls, var, noise)
+            Xs = gp_lib.bank_prescale_X(Xd, ls)
+            cache = self._gp_cache = {
+                "key": key, "Xs": Xs, "z": jnp.asarray(z),
+                "mask": jnp.asarray(mask), "L": L, "Linv": Linv,
+                "ls": jnp.asarray(ls), "var": jnp.asarray(var),
+                "noise": jnp.asarray(noise)}
+            led.ensure_gp_capacity(na)
+            led.L[:, :na, :na] = np.asarray(L)
+            led.Linv[:, :na, :na] = np.asarray(Linv)
+        # candidate-dependent stages (every ask)
+        Cs = gp_lib.bank_prescale_C(C, cache["ls"])
+        Xs, z, maskd = cache["Xs"], cache["z"], cache["mask"]
+        L, Linv = cache["L"], cache["Linv"]
+        if int(k_pend.max()):
+            Pd = self._gather_pend(k_pend, pend_cap)
+            Xs, z, maskd, L, Linv = gp_lib.bank_absorb(
+                Xs, z, maskd, L, Linv, Pd, k_pend.astype(np.float32),
+                k_obs.astype(np.float32), cache["ls"], cache["var"],
+                cache["noise"], pend_cap=pend_cap)
+        d2, s = gp_lib.bank_dist(Cs, Xs)
+        e = gp_lib.bank_exp(s)
+        return gp_lib.bank_pick(
+            d2, s, e, Cs, z, maskd, L, Linv, cache["var"], cache["noise"],
+            (k_obs + k_pend).astype(np.float32), np.float32(dom),
+            batch_size=n, S=C.shape[1])
+
+    def _dispatch_tpe(self, Xd, yraw, mask, Pd, C, k_obs, k_pend, n, na):
+        from repro.core import tpe as tpe_lib
+        from repro.kernels.tpe_kde.ops import pad_dims
+        led = self.ledger
+        B, d = led.n_studies, led.dim
+        dp = pad_dims(d)
+        # TPE layout: observed rows, then pending rows, then zeros
+        Xt = np.zeros((B, na, dp), np.float32)
+        yt = np.zeros((B, na), np.float32)
+        for b in range(B):
+            ko, kp = int(k_obs[b]), int(k_pend[b])
+            Xt[b, :ko, :d] = Xd[b, :ko]
+            yt[b, :ko] = yraw[b, :ko]
+            if kp:
+                Xt[b, ko:ko + kp, :d] = Pd[b, :kp]
+        Sp = C.shape[1]
+        Ct = np.zeros((B, Sp, dp), np.float32)
+        Ct[:, :, :d] = C
+        gamma = self.strategy_kwargs.get("gamma", 0.25)
+        pending_penalty = self.strategy_kwargs.get("pending_penalty", False)
+        kp_eff = (k_pend if pending_penalty
+                  else np.zeros_like(k_pend))
+        meta = np.stack([k_obs.astype(np.float32),
+                         kp_eff.astype(np.float32),
+                         np.full((B,), Sp, np.float32),
+                         np.full((B,), gamma, np.float32)], axis=1)
+        return tpe_lib.fused_tpe_propose_bank(
+            Xt, yt, Ct, meta, batch_size=n, d_true=d,
+            use_pallas=False, interpret=self.pallas_interpret)
+
+    # ---------------------------------------------------------- checkpoint
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-able fleet snapshot: the bank candidate stream plus every
+        study's v1 single-study snapshot (so one study's entry is exactly
+        what its view's own ``state_dict`` returns)."""
+        led = self.ledger
+        return {
+            "version": 1,
+            "kind": "study_bank",
+            "n_studies": self.n_studies,
+            "rng_state": self._rng.bit_generator.state,
+            "studies": [v.state_dict() for v in self.studies],
+            # the bank fit schedule lives in the ledger, not the views'
+            # strategy GPs — carried bank-level so the per-study entries
+            # stay exactly the v1 single-study format
+            "gp_bank": [{
+                "log_ls": [float(x) for x in led.log_ls[b]],
+                "log_var": float(led.log_var[b]),
+                "log_noise": float(led.log_noise[b]),
+                "have_fit": int(led.have_fit[b]),
+                "n_fit": int(led.n_fit[b]),
+                "y_mean": float(led.y_mean[b]),
+                "y_std": float(led.y_std[b]),
+            } for b in range(led.n_studies)],
+        }
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        if sd.get("kind") != "study_bank":
+            raise ValueError("not a study_bank state dict")
+        if sd["n_studies"] != self.n_studies:
+            raise ValueError(f"bank holds {self.n_studies} studies, "
+                             f"snapshot has {sd['n_studies']}")
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = sd["rng_state"]
+        for v, s in zip(self.studies, sd["studies"]):
+            v.load_state_dict(s)      # resets the ledger row first
+        led = self.ledger
+        for b, g in enumerate(sd.get("gp_bank", [])):
+            led.log_ls[b] = np.asarray(g["log_ls"], np.float32)
+            led.log_var[b] = g["log_var"]
+            led.log_noise[b] = g["log_noise"]
+            led.have_fit[b] = g["have_fit"]
+            led.n_fit[b] = g["n_fit"]
+            led.y_mean[b] = g["y_mean"]
+            led.y_std[b] = g["y_std"]
+
+    def save(self, path, iteration: int = 0) -> None:
+        """One-write fleet checkpoint: every ledger array (the pytree
+        leaves) plus a JSON meta block (params dicts, best traces, RNG
+        streams) in a single atomically-replaced ``.npz`` file."""
+        from repro.core.optimizer import _to_jsonable
+        led = self.ledger
+        for b, v in enumerate(self.studies):
+            led.rng_state[b] = pack_rng_state(v._rng)
+        leaves, _ = jax.tree_util.tree_flatten(led)
+        arrays = {f"led_{name}": np.asarray(leaf) for name, leaf
+                  in zip(StudyLedger.ARRAY_FIELDS, leaves)}
+        meta = {
+            "version": 1,
+            "kind": "study_bank",
+            "iteration": iteration,
+            "n_studies": self.n_studies,
+            "dim": led.dim,
+            "bank_rng_state": self._rng.bit_generator.state,
+            "studies": [{
+                "sign": v.sign,
+                "best_trace": list(v._best_trace),
+                "gp": (getattr(v._strat, "gp", None).export_state()
+                       if getattr(v._strat, "gp", None) is not None
+                       else v._gp_snapshot),
+                "params": [_to_jsonable(v._trials[i].params)
+                           for i in range(int(led.n_trials[b]))],
+            } for b, v in enumerate(self.studies)],
+        }
+        p = Path(path)
+        tmp = p.with_suffix(".tmp")
+        with open(tmp, "wb") as fh:
+            np.savez(fh, meta=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        os.replace(tmp, p)  # atomic: a crash never corrupts the checkpoint
+
+    def load(self, path) -> int:
+        """Restore a ``save`` checkpoint in place; returns the stored
+        iteration.  Arrays are restored directly (no re-encode), params
+        dicts and RNG streams come from the meta block."""
+        from repro.core.optimizer import Trial
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["meta"]).decode())
+            if meta.get("kind") != "study_bank":
+                raise ValueError("not a study_bank checkpoint")
+            if meta["n_studies"] != self.n_studies:
+                raise ValueError(
+                    f"bank holds {self.n_studies} studies, checkpoint has "
+                    f"{meta['n_studies']}")
+            arrays = {name: z[f"led_{name}"]
+                      for name in StudyLedger.ARRAY_FIELDS}
+        led = self.ledger
+        for name in StudyLedger.ARRAY_FIELDS:
+            setattr(led, name, arrays[name])
+        led.obs_stamp += 1   # wholesale array swap: device cache is stale
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = meta["bank_rng_state"]
+        for b, v in enumerate(self.studies):
+            ms = meta["studies"][b]
+            v.sign = ms["sign"]
+            v._best_trace = list(ms["best_trace"])
+            v._gp_snapshot = ms["gp"]
+            v._strat = None
+            v._rng = unpack_rng_state(led.rng_state[b])
+            v._trials = {
+                tid: Trial(tid, dict(params), _ledger=led, _study=b)
+                for tid, params in enumerate(ms["params"])}
+        return meta["iteration"]

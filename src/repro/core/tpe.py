@@ -107,6 +107,23 @@ def fused_tpe_propose(X, y, C, meta, *, batch_size: int, d_true: int,
     return idx
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "batch_size", "d_true", "use_pallas", "interpret", "block_s"))
+def fused_tpe_propose_bank(X, y, C, meta, *, batch_size: int, d_true: int,
+                           use_pallas: bool = False, interpret: bool = True,
+                           block_s: int = 256):
+    """``fused_tpe_propose`` vmapped over a leading study axis (the
+    StudyBank ask path): X (B, na, dp), y (B, na), C (B, Sp, dp) and one
+    packed meta row per study.  The per-study masked ranks come from
+    ``meta``, so the whole bank shares one bucketed program regardless of
+    how many observations each study holds.  Returns (B, batch_size) pick
+    indices."""
+    one = functools.partial(fused_tpe_propose, batch_size=batch_size,
+                            d_true=d_true, use_pallas=use_pallas,
+                            interpret=interpret, block_s=block_s)
+    return jax.vmap(one)(X, y, C, meta)
+
+
 class TPEStrategy(BaseStrategy):
     needs_gp = True  # needs observations (not an actual GP)
 

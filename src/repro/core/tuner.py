@@ -3,7 +3,11 @@
 All optimizer state (space, strategy/GP, RNG, trial ledger, checkpoint
 schedule) lives in the ask/tell core (``repro.core.optimizer``); this class
 only runs the paper's Fig. 1 workflow: ask a batch, dispatch it through the
-objective, tell back whatever subset returns, repeat.
+objective, tell back whatever subset returns, repeat.  Since ISSUE 6 the
+core itself is a bank-of-one view over a ``StudyLedger`` — the driver API
+and every checkpoint stay unchanged, but fleets of tuners can share one
+``StudyBank`` and be served by a single vmap'd ask (see
+``repro.core.studybank``).
 
 The objective-function contract is the paper's fault-tolerance mechanism
 (§2.2/§2.4): the tuner passes a *list* of configurations; the objective

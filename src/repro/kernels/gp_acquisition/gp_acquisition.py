@@ -1,18 +1,24 @@
-"""Pallas TPU kernel: fused Matern-5/2 + GP posterior + UCB scoring.
+"""Pallas TPU kernel: fused Matern-5/2 + GP posterior scoring.
 
 Tiling: candidates are blocked (BS rows per grid step) into VMEM; the padded
-training set (n <= 512 typically), Kinv, and alpha are small enough to live
-in VMEM for the whole kernel.  Per block:
+training set (n <= 512 typically), the triangular inverse factor, and alpha
+are small enough to live in VMEM for the whole kernel.  Per block:
 
     MXU:  cross-covariance k (BS, n)  via the |c - x|^2 expansion (one matmul)
-          t = k @ Kinv                (BS, n)
-    VPU:  matern transform, mu/var/UCB epilogue
+          t = k @ L^{-T}              (BS, n)
+    VPU:  matern transform, mu/var epilogue (+ rank-1 downdates)
 
 which avoids 3 HBM round-trips of the (S, n) covariance the unfused jnp
 version makes (k, t, and the elementwise products each materialize).
 
 The candidate dim d is zero-padded to a lane multiple by ops.py; padded
 columns contribute 0 to the distance because both operands are 0 there.
+
+The original fused-UCB kernel (dense K^{-1} quadratic form, beta baked into
+the epilogue) was retired with the K^{-1} scoring path: ``score_cov_pallas``
+is the one scoring kernel (factor-based, variance as a monotone sum of
+squares) and acquisition epilogues live in ``core.scoring``/``core.
+acquisition`` on top of its (mu, sig2) output.
 """
 from __future__ import annotations
 
@@ -21,67 +27,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-
-
-def _ucb_kernel(c_ref, x_ref, mask_ref, kinv_ref, alpha_ref, scal_ref,
-                out_ref):
-    """One grid step: score a (BS, d) block of candidates.
-
-    scal_ref holds [var, noise, beta] broadcast as a (1, 4) f32 row (SMEM-
-    friendly scalars are awkward across interpret/TPU; a tiny VMEM row works
-    everywhere).
-    """
-    c = c_ref[...]                      # (BS, d)  already / lengthscale
-    x = x_ref[...]                      # (n, d)   already / lengthscale
-    mask = mask_ref[...]                # (1, n)
-    var = scal_ref[0, 0]
-    noise = scal_ref[0, 1]
-    beta = scal_ref[0, 2]
-
-    # squared distances via expansion (the matmul hits the MXU)
-    c2 = jnp.sum(c * c, axis=-1, keepdims=True)          # (BS, 1)
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True).T        # (1, n)
-    d2 = jnp.maximum(c2 + x2 - 2.0 * jax.lax.dot(
-        c, x.T, preferred_element_type=jnp.float32), 0.0)
-    r = jnp.sqrt(jnp.maximum(d2, 1e-12))
-    s = jnp.sqrt(5.0) * r
-    k = var * (1.0 + s + (5.0 / 3.0) * d2) * jnp.exp(-s) * mask  # (BS, n)
-
-    t = jax.lax.dot(k, kinv_ref[...],
-                    preferred_element_type=jnp.float32)   # (BS, n)
-    q = jnp.sum(t * k, axis=-1)
-    mu = jnp.sum(k * alpha_ref[...], axis=-1)             # alpha (1, n)
-    sig2 = jnp.maximum(var + noise - q, 1e-10)
-    out_ref[...] = (mu + jnp.sqrt(beta) * jnp.sqrt(sig2))[:, None]
-
-
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def ucb_scores_pallas(cands, X, mask, Kinv, alpha, var, noise, beta,
-                      block_s: int = 256, interpret: bool = True):
-    """cands (S, d) pre-divided by lengthscale; X (n, d) likewise."""
-    S, d = cands.shape
-    n = X.shape[0]
-    scal = jnp.stack([var, noise, beta, jnp.zeros_like(var)])[None, :]
-
-    grid = (S // block_s,)
-    out = pl.pallas_call(
-        _ucb_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_s, d), lambda i: (i, 0)),   # candidate tile
-            pl.BlockSpec((n, d), lambda i: (0, 0)),         # train (resident)
-            pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((n, n), lambda i: (0, 0)),         # Kinv (resident)
-            pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
-        interpret=interpret,
-    )(cands.astype(jnp.float32), X.astype(jnp.float32),
-      mask[None, :].astype(jnp.float32), Kinv.astype(jnp.float32),
-      alpha[None, :].astype(jnp.float32), scal.astype(jnp.float32))
-    return out[:, 0]
 
 
 def _score_cov_kernel(c_ref, x_ref, mask_ref, linvt_ref, alpha_ref, scal_ref,

@@ -9,13 +9,10 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gp_acquisition.gp_acquisition import (score_cov_pallas,
-                                                         ucb_scores_pallas)
-from repro.kernels.gp_acquisition.ref import ucb_scores_ref
+from repro.kernels.gp_acquisition.gp_acquisition import score_cov_pallas
 
 
 def _pad_rows(a: np.ndarray, m: int) -> np.ndarray:
@@ -47,27 +44,6 @@ def score_cov(cands, X, mask, Linv, alpha, ls, var, noise, *,
         jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
         block_s=block_s, interpret=interpret)
     return np.asarray(mu)[:S], np.asarray(sig2)[:S]
-
-
-def ucb_scores(cands, X, mask, Kinv, alpha, ls, var, noise, beta, *,
-               block_s: int = 256, interpret: bool = True,
-               use_pallas: bool = True):
-    """Score candidates; pads S to a block multiple and d to a lane multiple."""
-    cands = np.asarray(cands, np.float32)
-    S, d = cands.shape
-    if not use_pallas:
-        return np.asarray(ucb_scores_ref(
-            jnp.asarray(cands), jnp.asarray(X), jnp.asarray(mask),
-            jnp.asarray(Kinv), jnp.asarray(alpha), jnp.asarray(ls),
-            jnp.asarray(var), jnp.asarray(noise), jnp.asarray(beta)))
-    c, Xp, S = _prescale(cands, X, ls, block_s)
-    out = ucb_scores_pallas(
-        jnp.asarray(c), jnp.asarray(Xp), jnp.asarray(mask, jnp.float32),
-        jnp.asarray(Kinv, jnp.float32), jnp.asarray(alpha, jnp.float32),
-        jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
-        jnp.asarray(beta, jnp.float32), block_s=block_s,
-        interpret=interpret)
-    return np.asarray(out)[:S]
 
 
 def gp_mean_std(st, cands, interpret: bool = True):

@@ -11,9 +11,10 @@ Linv = L^-1 of its Cholesky, and alpha = K^-1 y, score S candidates:
 The sum-of-squares form is the conditioning-hardened scoring contract
 (ISSUE 5) shared with the Pallas kernels; ``score_cov_ref`` doubles as the
 shared core's jnp execution backend.  ``ucb_scores_ref`` alone retains the
-legacy K^-1 quadratic form ``k . (Kinv k)`` — it is the baseline the
-``pallas_rescore_full`` benchmark rows measure against, and its float32
-cancellation on ill-conditioned K is exactly what the hardening removed.
+legacy K^-1 quadratic form ``k . (Kinv k)`` as a *numerical contrast
+oracle* (``benchmarks/kernel_bench.py`` and the conditioning tests use it
+to show the cancellation the hardening removed); the ``pallas_rescore_*``
+benchmark rows measure the factor scorer ``score_cov_pallas`` directly.
 
 This is Mango's Monte-Carlo acquisition-maximization hot loop (paper §2.3):
 S is 10^3..10^5 per pick, times batch_size picks, times iterations.

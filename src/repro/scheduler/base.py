@@ -73,8 +73,8 @@ class BatchSchedulerBase:
     def make_objective(self, trial_fn: TrialFn) -> Objective:
         raise NotImplementedError
 
-    def as_async(self) -> "BatchToAsyncAdapter":
-        return BatchToAsyncAdapter(self)
+    def as_async(self, coalesce: bool = False) -> "BatchToAsyncAdapter":
+        return BatchToAsyncAdapter(self, coalesce=coalesce)
 
 
 class BatchToAsyncAdapter:
@@ -88,10 +88,25 @@ class BatchToAsyncAdapter:
     trial was dropped and surfaces as a failed handle.  Completion signals
     the shared condition variable, so ``wait_any`` wakes exactly when a
     trial lands.
+
+    ``coalesce=True`` batches instead: submits enqueue, and a single
+    dispatcher thread drains the whole queue into ONE objective call per
+    (objective, drain) group.  Schedulers with per-batch setup cost — a
+    ``ProcessScheduler`` builds a fresh process pool per objective call, a
+    task-queue scheduler pays a round-trip — amortize that cost over every
+    trial queued while the previous dispatch ran, at the price of
+    dispatch-granular (not trial-granular) completion.  Fault semantics
+    are the batch contract's: results are matched back to handles
+    identity-first (the scheduler echoes the params object) then by
+    equality, and a submitted trial missing from the partial result
+    surfaces as a failed handle.
     """
 
-    def __init__(self, scheduler: Scheduler):
+    def __init__(self, scheduler: Scheduler, coalesce: bool = False):
         self.scheduler = scheduler
+        self.coalesce = bool(coalesce)
+        self._queue: List[tuple] = []   # (handle, objective, pinned fn)
+        self._dispatcher: Optional[threading.Thread] = None
         self._cv = threading.Condition()
         # keyed by the fn object itself, weakly: an ``id(fn)`` key outlives
         # the fn, so a later fn allocated at the recycled address would
@@ -136,6 +151,16 @@ class BatchToAsyncAdapter:
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
         handle = TaskHandle(params)
         objective, pin = self._objective_for(fn)
+        if self.coalesce:
+            with self._cv:
+                self._queue.append((handle, objective, pin))
+                if self._dispatcher is None:
+                    self._dispatcher = threading.Thread(
+                        target=self._drain_loop, daemon=True,
+                        name="mango-async-coalesce")
+                    self._dispatcher.start()
+                self._cv.notify_all()
+            return handle
 
         def run(_pin_fn=pin):   # keep the wrapped fn alive for this trial
             try:
@@ -154,6 +179,55 @@ class BatchToAsyncAdapter:
         threading.Thread(target=run, daemon=True,
                          name="mango-async-adapter").start()
         return handle
+
+    # ---- coalescing dispatcher -------------------------------------------
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(lambda: self._queue)
+                batch, self._queue = self._queue, []
+            # group by cached objective (== by trial fn): one scheduler
+            # dispatch per group, preserving submit order across groups
+            groups: Dict[int, tuple] = {}
+            order: List[int] = []
+            for h, obj, pin in batch:
+                k = id(obj)
+                if k not in groups:
+                    groups[k] = (obj, [])
+                    order.append(k)
+                groups[k][1].append((h, pin))
+            for k in order:
+                obj, items = groups[k]
+                self._dispatch_group(obj, items)
+
+    def _dispatch_group(self, objective: Objective, items: List[tuple]):
+        """One batch dispatch; match the partial result back to handles
+        (identity first, then equality — the tuner's matching contract)."""
+        try:
+            evals, params = objective([h.params for h, _ in items])
+            remaining = list(items)
+            for v, par in zip(evals, params):
+                hit = next((i for i, (h, _) in enumerate(remaining)
+                            if h.params is par), None)
+                if hit is None:
+                    hit = next((i for i, (h, _) in enumerate(remaining)
+                                if h.params == par), None)
+                if hit is None and remaining:
+                    hit = 0   # unmatchable result: consume in submit order
+                if hit is None:
+                    continue  # more results than submitted handles
+                remaining.pop(hit)[0].result = float(v)
+            for h, _ in remaining:
+                h.error = RuntimeError(
+                    "trial dropped by scheduler (fault/deadline)")
+        except Exception as e:  # noqa: BLE001
+            for h, _ in items:
+                if h.result is None and h.error is None:
+                    h.error = e
+        with self._cv:
+            for h, _ in items:
+                h.done.set()
+            self._cv.notify_all()
 
     def wait_any(self, handles: List[TaskHandle],
                  timeout: Optional[float] = None) -> List[TaskHandle]:
@@ -189,15 +263,17 @@ class _PollingWaitShim:
             time.sleep(self._poll)
 
 
-def as_async(scheduler, poll: float = 0.01) -> AsyncScheduler:
+def as_async(scheduler, poll: float = 0.01,
+             coalesce: bool = False) -> AsyncScheduler:
     """Return the async (submit/wait_any) view of any scheduler.  ``poll``
     only applies to the shim around submit-only schedulers; everything else
-    wakes on a completion condition."""
+    wakes on a completion condition.  ``coalesce`` batches queued submits
+    into one dispatch per drain (batch-objective schedulers only)."""
     if hasattr(scheduler, "submit"):
         if hasattr(scheduler, "wait_any"):
             return scheduler
         return _PollingWaitShim(scheduler, poll=poll)
     if hasattr(scheduler, "make_objective"):
-        return BatchToAsyncAdapter(scheduler)
+        return BatchToAsyncAdapter(scheduler, coalesce=coalesce)
     raise TypeError(f"{scheduler!r} implements neither the batch nor the "
                     "async scheduler protocol")

@@ -8,9 +8,8 @@ from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gp_acquisition.gp_acquisition import (score_cov_pallas,
                                                          var_downdate_pallas)
-from repro.kernels.gp_acquisition.ops import ucb_scores
+from repro.kernels.gp_acquisition.ops import score_cov
 from repro.kernels.gp_acquisition.ref import (matern52, score_cov_ref,
-                                              ucb_scores_ref,
                                               var_downdate_ref)
 from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
@@ -77,25 +76,31 @@ def test_mlstm_chunk(B, NH, S, dh, L):
 
 @pytest.mark.parametrize("n,d,S", [(64, 5, 500), (32, 3, 300), (128, 11, 257)])
 def test_gp_acquisition(n, d, S):
+    """The public scoring wrapper (``ops.score_cov``: S padded to a block
+    multiple, d to a lane multiple) matches the unpadded factor oracle."""
+    import scipy.linalg as sla
+
     rng = np.random.default_rng(0)
     X = rng.uniform(size=(n, d)).astype(np.float32)
     mask = np.ones(n, np.float32)
     mask[n - n // 4:] = 0.0
     ls = np.full(d, 0.5, np.float32)
-    var, noise, beta = 1.3, 0.01, 4.0
+    var, noise = 1.3, 0.01
     K = np.asarray(matern52(jnp.asarray(X / ls), jnp.asarray(X / ls),
                             1.0, var))
     K = K * mask[:, None] * mask[None, :]
     K[np.diag_indices(n)] = np.where(mask > 0, var + noise + 1e-6, 1.0)
-    Kinv = np.linalg.inv(K).astype(np.float32)
+    L = np.linalg.cholesky(K)
+    Linv = sla.solve_triangular(L, np.eye(n), lower=True).astype(np.float32)
     y = (rng.normal(size=n) * mask).astype(np.float32)
-    alpha = Kinv @ y
+    alpha = (Linv.T @ (Linv @ y)).astype(np.float32)
     C = rng.uniform(size=(S, d)).astype(np.float32)
-    out = ucb_scores(C, X, mask, Kinv, alpha, ls, var, noise, beta)
-    ref = np.asarray(ucb_scores_ref(
+    mu, sig2 = score_cov(C, X, mask, Linv, alpha, ls, var, noise)
+    ref_mu, ref_sig2, _ = score_cov_ref(
         jnp.asarray(C / ls), jnp.asarray(X / ls), jnp.asarray(mask),
-        jnp.asarray(Kinv), jnp.asarray(alpha), 1.0, var, noise, beta))
-    np.testing.assert_allclose(out, ref, atol=1e-4)
+        jnp.asarray(Linv), jnp.asarray(alpha), 1.0, var, noise)
+    np.testing.assert_allclose(mu, np.asarray(ref_mu), atol=1e-4)
+    np.testing.assert_allclose(sig2, np.asarray(ref_sig2), atol=1e-4)
 
 
 def _gp_system(n=64, d=5, S=512, seed=0):

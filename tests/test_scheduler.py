@@ -288,3 +288,97 @@ def test_async_tuner_continuous_batching():
     assert len(res["objective_values"]) == 12
     assert res["best_objective"] > -0.05
     sched.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# Coalescing adapter: per-batch setup cost amortization
+# --------------------------------------------------------------------------- #
+class CountingScheduler(SerialScheduler):
+    """ProcessScheduler-shaped: every objective call pays one 'pool setup'
+    (here just counted), so dispatch count == setup count."""
+
+    def __init__(self):
+        import threading
+        self.dispatches = []
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def make_objective(self, trial_fn):
+        inner = super().make_objective(trial_fn)
+
+        def objective(params_list):
+            self.dispatches.append(len(params_list))
+            if len(self.dispatches) == 1:
+                self.entered.set()
+                self.release.wait(10)
+            return inner(params_list)
+
+        return objective
+
+
+def test_batch_to_async_adapter_coalesces_queued_submits():
+    """Submits queued while a dispatch is in flight ride ONE later
+    objective call: 8 single-trial submits cost 2 scheduler dispatches
+    (1 + the 7 that queued behind it), amortizing per-batch setup cost."""
+    sched = CountingScheduler()
+    adapter = sched.as_async(coalesce=True)
+    h0 = adapter.submit(trial, {"x": 0.125})
+    assert sched.entered.wait(10)
+    later = [adapter.submit(trial, {"x": i / 16.0}) for i in range(1, 8)]
+    sched.release.set()
+    for h in [h0] + later:
+        assert h.done.wait(10)
+        assert h.error is None
+        assert h.result == pytest.approx(trial(h.params))
+    assert sched.dispatches == [1, 7]
+
+
+def test_batch_to_async_adapter_default_stays_per_trial():
+    sched = CountingScheduler()
+    sched.release.set()   # don't block the first dispatch
+    adapter = sched.as_async()
+    handles = [adapter.submit(trial, {"x": i / 8.0}) for i in range(4)]
+    for h in handles:
+        assert h.done.wait(10)
+    assert sorted(sched.dispatches) == [1, 1, 1, 1]
+
+
+def test_coalescing_adapter_keeps_fault_semantics():
+    """A trial dropped inside a coalesced batch surfaces as a failed
+    handle; its batchmates still complete."""
+    import threading
+
+    class HalfDrop(SerialScheduler):
+        def __init__(self):
+            self.entered = threading.Event()
+            self.release = threading.Event()
+            self.calls = 0
+
+        def make_objective(self, trial_fn):
+            inner = super().make_objective(trial_fn)
+
+            def objective(params_list):
+                self.calls += 1
+                if self.calls == 1:
+                    self.entered.set()
+                    self.release.wait(10)
+                return inner(params_list)
+
+            return objective
+
+    def flaky(p):
+        if p["x"] > 0.5:
+            raise RuntimeError("boom")
+        return trial(p)
+
+    sched = HalfDrop()
+    adapter = sched.as_async(coalesce=True)
+    first = adapter.submit(flaky, {"x": 0.1})
+    assert sched.entered.wait(10)
+    ok = adapter.submit(flaky, {"x": 0.2})
+    bad = adapter.submit(flaky, {"x": 0.9})
+    sched.release.set()
+    for h in (first, ok, bad):
+        assert h.done.wait(10)
+    assert first.error is None and ok.error is None
+    assert bad.result is None and isinstance(bad.error, RuntimeError)

@@ -1,0 +1,274 @@
+"""StudyBank: fleet serialization, kill->resume replay, bucket-boundary
+parity of the vmap'd bank ask against unpadded single-study oracles."""
+import json
+import os
+
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.core import AskTellOptimizer, StudyBank, StudyLedger
+from repro.core.studybank import pack_rng_state, unpack_rng_state
+
+SPACE = {"x": stats.uniform(0, 1), "y": stats.uniform(-1, 2)}
+STRATS = ["bayesian", "tpe", "clustering"]
+
+
+def _objective(p):
+    return -(p["x"] - 0.3) ** 2 - (p["y"] - 0.5) ** 2
+
+
+def _run(bank, steps, leave_pending=False):
+    """Drive every study; returns the full proposal history.  With
+    ``leave_pending`` every third ask stays in flight (async mode)."""
+    hist = []
+    for s in range(steps):
+        trials = bank.ask_all(1)
+        for b, ts in enumerate(trials):
+            for t in ts:
+                hist.append((b, t.id, dict(t.params)))
+                if not (leave_pending and s % 3 == 2):
+                    bank.tell(b, t.id, _objective(t.params))
+    return hist
+
+
+# --------------------------------------------------------------------------- #
+# serialization
+# --------------------------------------------------------------------------- #
+def test_rng_state_pack_roundtrip():
+    rng = np.random.default_rng(1234)
+    rng.uniform(size=7)
+    rng.integers(0, 10)  # leaves a cached uint32 in the bit generator
+    clone = unpack_rng_state(pack_rng_state(rng))
+    assert list(clone.uniform(size=5)) == list(rng.uniform(size=5))
+    assert clone.bit_generator.state == rng.bit_generator.state
+
+
+def test_fleet_state_dict_roundtrip_json():
+    bank = StudyBank(SPACE, 4, seed=5, mc_samples=32)
+    _run(bank, 4, leave_pending=True)
+    sd = json.loads(json.dumps(bank.state_dict()))
+    bank2 = StudyBank(SPACE, 4, seed=99, mc_samples=32)
+    bank2.load_state_dict(sd)
+    assert bank2.state_dict() == sd
+
+
+def test_single_study_view_matches_v1_snapshot_format():
+    """A bank study's snapshot entry IS the v1 single-study format: same
+    keys, and byte-identical to an AskTellOptimizer replaying the same
+    study stand-alone."""
+    bank = StudyBank(SPACE, 3, seed=5, mc_samples=32)
+    _run(bank, 3)
+    entry = bank.state_dict()["studies"][1]
+    assert set(entry) == {"version", "next_id", "ask_count", "n_failed",
+                          "sign", "best_trace", "trials", "rng_state", "gp"}
+    assert entry["version"] == 1
+    # a stand-alone (bank-of-one) optimizer loads it and round-trips it
+    solo = AskTellOptimizer(SPACE, seed=0)
+    solo.load_state_dict(entry)
+    assert solo.state_dict() == entry
+    assert solo.n_observed == bank.study(1).n_observed
+    assert [t.id for t in solo.observed_trials()] == \
+        [t.id for t in bank.study(1).observed_trials()]
+
+
+def test_npz_checkpoint_single_write(tmp_path):
+    bank = StudyBank(SPACE, 4, seed=2, mc_samples=32)
+    _run(bank, 4, leave_pending=True)
+    path = tmp_path / "fleet.npz"
+    bank.save(path, iteration=4)
+    assert path.exists() and not (tmp_path / "fleet.tmp").exists()
+    bank2 = StudyBank(SPACE, 4, seed=77, mc_samples=32)
+    assert bank2.load(path) == 4
+    assert bank2.state_dict() == bank.state_dict()
+    for name in StudyLedger.ARRAY_FIELDS:
+        np.testing.assert_array_equal(getattr(bank2.ledger, name),
+                                      getattr(bank.ledger, name))
+
+
+def test_checkpoint_study_count_mismatch_raises(tmp_path):
+    bank = StudyBank(SPACE, 3, seed=2, mc_samples=32)
+    path = tmp_path / "fleet.npz"
+    bank.save(path)
+    other = StudyBank(SPACE, 4, seed=2, mc_samples=32)
+    with pytest.raises(ValueError):
+        other.load(path)
+    with pytest.raises(ValueError):
+        other.load_state_dict(bank.state_dict())
+
+
+# --------------------------------------------------------------------------- #
+# kill -> resume replay (16-study bank, mid-flight)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("opt", STRATS)
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_bank_kill_resume_replay(opt, mode, tmp_path):
+    """A 16-study bank killed mid-flight resumes to the exact proposals of
+    an uninterrupted run — sync (every trial told before the next ask) and
+    async (a third of the asks still in flight at the kill point)."""
+    pending = mode == "async"
+    kw = dict(optimizer=opt, seed=11, mc_samples=32)
+    ref = StudyBank(SPACE, 16, **kw)
+    h_ref = _run(ref, 4, pending) + _run(ref, 3, pending)
+
+    # kill via the one-write npz checkpoint ...
+    a = StudyBank(SPACE, 16, **kw)
+    _run(a, 4, pending)
+    path = tmp_path / f"{opt}-{mode}.npz"
+    a.save(path)
+    b = StudyBank(SPACE, 16, **kw)
+    b.load(path)
+    h_npz = _run(b, 3, pending)
+    assert h_npz == h_ref[len(h_ref) - len(h_npz):]
+
+    # ... and via the JSON fleet state dict
+    c = StudyBank(SPACE, 16, **kw)
+    c.load_state_dict(json.loads(json.dumps(a.state_dict())))
+    h_json = _run(c, 3, pending)
+    assert h_json == h_ref[len(h_ref) - len(h_json):]
+
+
+# --------------------------------------------------------------------------- #
+# bucket-boundary parity vs unpadded oracles
+# --------------------------------------------------------------------------- #
+EDGE = 28  # bank bucket jumps 32 -> 64 here (n_obs + pend_cap(4) + n(1))
+
+
+def _seeded_bank(opt, n_obs_list, seed=31):
+    """A bank with one study per requested observation count, frozen
+    hypers (no fit runs during the ask under test), noise-floored values
+    so the acquisition surfaces have no ties."""
+    rng = np.random.default_rng(seed)
+    bank = StudyBank(SPACE, len(n_obs_list), optimizer=opt, seed=seed,
+                     mc_samples=64)
+    led = bank.ledger
+    for b, k in enumerate(n_obs_list):
+        v = bank.study(b)
+        for _ in range(k):
+            p = {"x": float(rng.uniform(0, 1)),
+                 "y": float(rng.uniform(-1, 1))}
+            v.observe_params(p, float(rng.normal()))
+        led.have_fit[b] = 1
+        led.n_fit[b] = k
+        led.log_ls[b] = np.log(0.5)
+        led.log_var[b] = 0.1
+        led.log_noise[b] = np.log(1e-2)
+        led.y_mean[b] = 0.0
+        led.y_std[b] = 1.0
+    return bank
+
+
+def _bank_ask_rows(bank, n):
+    """Run one bank ask; returns per-study encoded pick rows plus the
+    candidate matrix each study saw (replayed from the bank RNG)."""
+    state = bank._rng.bit_generator.state
+    out = bank.ask_all(n)
+    B = bank.n_studies
+    n_mc = bank.mc_samples
+    replay = np.random.default_rng()
+    replay.bit_generator.state = state
+    cols = bank.space.sample_columns(B * n_mc, replay)
+    C = bank.space.encode_columns(cols, B * n_mc).reshape(B, n_mc, -1)
+    rows = [bank.space.encode([t.params for t in ts]) for ts in out]
+    return rows, C
+
+
+@pytest.mark.parametrize("n_obs", [EDGE - 1, EDGE, EDGE + 1])
+def test_bucket_boundary_parity_bayesian(n_obs):
+    import jax.numpy as jnp
+
+    from repro.core import gp as gp_lib
+    from repro.core import scoring
+
+    n = 2
+    bank = _seeded_bank("bayesian", [n_obs])
+    led = bank.ledger
+    ids = led.obs_ids(0)
+    X = led.X[0, ids].astype(np.float32)              # unpadded (n_obs, d)
+    z = (led.y[0, ids].astype(np.float32) - led.y_mean[0]) / led.y_std[0]
+    rows, C = _bank_ask_rows(bank, n)
+    ls = np.exp(led.log_ls[0]).astype(np.float32)
+    var = np.float32(np.exp(led.log_var[0]))
+    noise = np.float32(np.exp(led.log_noise[0]) + 1e-5)
+    mask = np.ones(n_obs, np.float32)
+    L = gp_lib.cholesky_masked(X, mask, ls, var, noise)
+    Linv = scoring.linv_from_chol(L)
+    idx = gp_lib.fused_propose_pallas_pending(
+        X, z, mask, L, Linv, np.zeros((4, X.shape[1]), np.float32),
+        jnp.float32(0.0), C[0].astype(np.float32), ls, var, noise,
+        jnp.float32(n_obs), jnp.float32(bank.study(0).domain_size), n, 4,
+        use_pallas=False)
+    oracle = C[0][np.asarray(idx)]
+    np.testing.assert_array_equal(np.asarray(rows[0], np.float32),
+                                  oracle.astype(np.float32))
+
+
+@pytest.mark.parametrize("n_obs", [EDGE - 1, EDGE, EDGE + 1])
+def test_bucket_boundary_parity_tpe(n_obs):
+    from repro.core.tpe import fused_tpe_propose
+    from repro.kernels.tpe_kde.ops import pad_dims
+
+    n = 2
+    bank = _seeded_bank("tpe", [n_obs])
+    led = bank.ledger
+    ids = led.obs_ids(0)
+    d = led.dim
+    rows, C = _bank_ask_rows(bank, n)
+    dp = pad_dims(d)
+    Xb = np.zeros((n_obs, dp), np.float32)            # unpadded rows
+    Xb[:, :d] = led.X[0, ids]
+    yb = led.y[0, ids].astype(np.float32)             # sign=+1
+    Cb = np.zeros((C.shape[1], dp), np.float32)
+    Cb[:, :d] = C[0]
+    meta = np.array([n_obs, 0, C.shape[1], 0.25], np.float32)
+    idx = fused_tpe_propose(Xb, yb, Cb, meta, batch_size=n, d_true=d)
+    oracle = C[0][np.asarray(idx)]
+    np.testing.assert_array_equal(np.asarray(rows[0], np.float32),
+                                  oracle.astype(np.float32))
+
+
+@pytest.mark.parametrize("n_obs", [EDGE - 1, EDGE, EDGE + 1])
+def test_bucket_boundary_parity_clustering(n_obs):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gp as gp_lib
+    from repro.core import scoring
+    from repro.core.acquisition import fused_cluster_propose
+    from repro.core.strategies import n_top_candidates
+
+    n = 2
+    bank = _seeded_bank("clustering", [n_obs])
+    led = bank.ledger
+    ask_count_before = int(led.ask_count[0])
+    ids = led.obs_ids(0)
+    X = led.X[0, ids].astype(np.float32)
+    z = (led.y[0, ids].astype(np.float32) - led.y_mean[0]) / led.y_std[0]
+    rows, C = _bank_ask_rows(bank, n)
+    ls = np.exp(led.log_ls[0]).astype(np.float32)
+    var = np.float32(np.exp(led.log_var[0]))
+    noise = np.float32(np.exp(led.log_noise[0]) + 1e-5)
+    mask = np.ones(n_obs, np.float32)
+    L = gp_lib.cholesky_masked(X, mask, ls, var, noise)
+    Linv = scoring.linv_from_chol(L)
+    idx = fused_cluster_propose(
+        X, z, mask, L, Linv, np.zeros((4, X.shape[1]), np.float32),
+        jnp.float32(0.0), C[0].astype(np.float32), ls, var, noise,
+        jnp.float32(n_obs), jnp.float32(bank.study(0).domain_size),
+        jax.random.PRNGKey(ask_count_before), n,
+        n_top_candidates(C.shape[1], n, 0.2), 4, use_pallas=False)
+    oracle = C[0][np.asarray(idx)]
+    np.testing.assert_array_equal(np.asarray(rows[0], np.float32),
+                                  oracle.astype(np.float32))
+
+
+def test_bucket_shapes_shared_across_bank():
+    """Studies of different sizes share one bucket: the bank ask pads every
+    study to the same power-of-2 capacity, and the ledger factor buffers
+    grow to hold it."""
+    bank = _seeded_bank("bayesian", [EDGE - 1, EDGE, EDGE + 1])
+    bank.ask_all(1)
+    # all three studies proposed through one program at one bucket shape
+    assert bank.ledger.gp_capacity >= 64
+    for b in range(3):
+        assert len(bank.study(b).pending_trials()) == 1
