@@ -61,12 +61,17 @@ class AsyncTuner:
         self.poll = poll_interval
         self.early_stopping = early_stopping
         self.checkpoint_path = checkpoint_path
-        self.opt = AskTellOptimizer(
-            param_space, optimizer=optimizer, seed=seed,
-            domain_size=domain_size, mc_samples=mc_samples,
-            fit_steps=fit_steps, use_pallas=use_pallas,
-            pallas_interpret=pallas_interpret, refit_every=refit_every,
-            strategy_kwargs=strategy_kwargs)
+        if hasattr(scheduler, "make_engine"):
+            # scheduler-supplied ask/tell core (ServiceScheduler: a remote
+            # study on the durable service; strategy config is server-side)
+            self.opt = scheduler.make_engine(param_space, None)
+        else:
+            self.opt = AskTellOptimizer(
+                param_space, optimizer=optimizer, seed=seed,
+                domain_size=domain_size, mc_samples=mc_samples,
+                fit_steps=fit_steps, use_pallas=use_pallas,
+                pallas_interpret=pallas_interpret, refit_every=refit_every,
+                strategy_kwargs=strategy_kwargs)
         self.space = self.opt.space
         if checkpoint_path and Path(checkpoint_path).exists():
             self.load_state(checkpoint_path)

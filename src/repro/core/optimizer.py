@@ -371,6 +371,36 @@ class AskTellOptimizer:
         self._n_failed += 1
         return t
 
+    # ------------------------------------------------- idempotent tell (WAL)
+    # The durable tuning service delivers tells at-least-once: a client that
+    # lost the response to a journaled tell retries it, and crash recovery
+    # replays a WAL suffix that may overlap the snapshot.  Dedup is by trial
+    # id: the first resolution wins, a repeat is a no-op (never an error and
+    # never a second ledger write).
+
+    def tell_once(self, trial_id: int, value: float):
+        """Idempotent ``tell``: returns ``(trial, applied)``.  A trial that
+        is already observed/failed is left untouched (``applied=False``);
+        an unknown id still raises ``KeyError`` (tell-before-ask is a
+        protocol violation, not a duplicate)."""
+        t = self._trials.get(trial_id)
+        if t is None:
+            raise KeyError(f"unknown trial id {trial_id!r} "
+                           "(tell before ask?)")
+        if t.status != PENDING:
+            return t, False
+        return self.tell(trial_id, value), True
+
+    def tell_failed_once(self, trial_id: int):
+        """Idempotent ``tell_failed``; same contract as ``tell_once``."""
+        t = self._trials.get(trial_id)
+        if t is None:
+            raise KeyError(f"unknown trial id {trial_id!r} "
+                           "(tell before ask?)")
+        if t.status != PENDING:
+            return t, False
+        return self.tell_failed(trial_id), True
+
     def observe_params(self, params: Dict[str, Any], value: float) -> Trial:
         """Observe a configuration that never went through ``ask`` (an
         objective returning params outside its batch — the legacy contract

@@ -72,12 +72,26 @@ class _Param:
             # bank's 10^4-10^5-candidate draws skip scipy's per-call arg
             # machinery without perturbing the RNG stream or the encoding.
             self._uniform_ls = None
+            # loguniform (scipy name "reciprocal") gets the same treatment:
+            # it defines no custom _rvs, so scipy draws it as
+            # _ppf(rng.uniform(n)) = exp(log a + u*(log b - log a)), and
+            # cdf is (log x - log a)/(log b - log a) — both reproduced here
+            # expression-for-expression so values AND the RNG stream stay
+            # bitwise identical to the scipy path.
+            self._loguniform_abls = None
             try:
-                if getattr(getattr(v, "dist", None), "name", "") == "uniform":
+                dname = getattr(getattr(v, "dist", None), "name", "")
+                if dname == "uniform":
                     _, loc, scale = v.dist._parse_args(*v.args, **v.kwds)
                     self._uniform_ls = (float(loc), float(scale))
+                elif dname in ("loguniform", "reciprocal"):
+                    (a, b), loc, scale = v.dist._parse_args(*v.args,
+                                                            **v.kwds)
+                    self._loguniform_abls = (float(a), float(b),
+                                             float(loc), float(scale))
             except Exception:
                 self._uniform_ls = None
+                self._loguniform_abls = None
         elif isinstance(v, range):
             self.kind = "range"
             self.choices = np.array(list(v))
@@ -118,6 +132,11 @@ class _Param:
             if self._uniform_ls is not None:
                 loc, scale = self._uniform_ls
                 return rng.uniform(size=n) * scale + loc
+            if self._loguniform_abls is not None:
+                a, b, loc, scale = self._loguniform_abls
+                u = rng.uniform(size=n)
+                return np.exp(np.log(a)
+                              + u * (np.log(b) - np.log(a))) * scale + loc
             return np.asarray(self.dist.rvs(size=n, random_state=rng))
         if self.kind == "range":
             return rng.choice(self.choices, size=n)
@@ -148,6 +167,13 @@ class _Param:
                 loc, scale = self._uniform_ls
                 enc = np.nan_to_num(np.clip((v - loc) / scale, 0.0, 1.0),
                                     nan=0.5)
+                return enc.reshape(n, 1)
+            if self._loguniform_abls is not None:
+                a, b, loc, scale = self._loguniform_abls
+                with np.errstate(all="ignore"):
+                    q = ((np.log((v - loc) / scale) - np.log(a))
+                         / (np.log(b) - np.log(a)))
+                    enc = np.nan_to_num(np.clip(q, 0.0, 1.0), nan=0.5)
                 return enc.reshape(n, 1)
             if hasattr(self.dist, "cdf"):
                 with np.errstate(all="ignore"):

@@ -56,10 +56,22 @@ def _pow2(n: int) -> int:
     return p
 
 
+# the one bit-generator the 6-word packed layout below encodes; checkpoints
+# carry it as a meta tag so a future second generator type fails loudly at
+# load instead of silently unpacking garbage words into a PCG64
+RNG_KIND = "PCG64"
+
+
 def pack_rng_state(rng: np.random.Generator) -> np.ndarray:
     """Pack a PCG64 Generator's full state into 6 uint64 words
     (state lo/hi, inc lo/hi, has_uint32, uinteger) for array storage."""
     st = rng.bit_generator.state
+    kind = st.get("bit_generator")
+    if kind != RNG_KIND:
+        raise ValueError(
+            f"pack_rng_state only encodes {RNG_KIND} streams; this "
+            f"generator is {kind!r} — its state does not fit the 6-word "
+            "packed layout (add a new rng_kind to the checkpoint format)")
     s, inc = st["state"]["state"], st["state"]["inc"]
     return np.array([s & _MASK64, (s >> 64) & _MASK64,
                      inc & _MASK64, (inc >> 64) & _MASK64,
@@ -261,6 +273,11 @@ class StudyBank:
         self.seed = seed
         self.ledger = StudyLedger(n_studies, self.space.dim)
         self._gp_cache = None   # obs_stamp-keyed device state (staged ask)
+        # monotonic operation sequence for journaled (WAL) deployments: the
+        # last op applied through ``apply_op``; snapshots carry it so crash
+        # recovery can skip journal records the snapshot already contains
+        self.op_seq = 0
+        self.extra = None       # side-channel meta restored by ``load``
         # bank-wide candidate stream: one flat draw of B*n_mc candidates per
         # ask_all, independent of the per-study streams
         self._rng = np.random.default_rng(seed)
@@ -288,6 +305,60 @@ class StudyBank:
 
     def tell_failed(self, study: int, trial_id: int):
         return self.studies[study].tell_failed(trial_id)
+
+    # ------------------------------------------------------ journal replay
+    def next_op_seq(self) -> int:
+        """Sequence number the *next* journaled operation must carry."""
+        return self.op_seq + 1
+
+    def apply_op(self, op: Dict[str, Any]):
+        """Apply one journaled operation to the bank (the WAL replay entry
+        point).  Ops are dicts ``{"seq", "op", "study", ...}``; ``seq``
+        must extend the bank's monotonic op sequence by exactly one — a
+        gap or reorder means the journal does not match this snapshot and
+        replay would diverge, so it raises instead of guessing.
+
+        Because every proposal is a pure function of the bank state and
+        each study's RNG stream, re-applying the op sequence from any
+        snapshot reconstructs bit-identical optimizer state: an ``ask``
+        record replays to the *same* trial ids and configurations the
+        original call served.  Tells replay through the idempotent
+        ``tell_once`` path, so an at-least-once journal (duplicate tell
+        records) cannot double-apply an observation.
+        """
+        seq = int(op["seq"])
+        if seq <= self.op_seq:
+            return None     # already contained in the snapshot: skip
+        if seq != self.op_seq + 1:
+            raise ValueError(
+                f"journal op seq {seq} does not extend bank op_seq "
+                f"{self.op_seq} (missing or reordered WAL records)")
+        kind = op["op"]
+        b = int(op["study"])
+        if not 0 <= b < self.n_studies:
+            raise ValueError(f"journal op targets study row {b}, bank "
+                             f"holds {self.n_studies}")
+        view = self.studies[b]
+        if kind == "create":
+            view.sign = float(op.get("sign", 1.0))
+            result = view
+        elif kind == "ask":
+            result = view.ask(int(op["n"]))
+        elif kind == "tell":
+            result = view.tell_once(int(op["trial_id"]),
+                                    float(op["value"]))
+        elif kind == "tell_failed":
+            result = view.tell_failed_once(int(op["trial_id"]))
+        elif kind == "observe":
+            result = view.observe_params(dict(op["params"]),
+                                         float(op["value"]))
+        elif kind == "trace":
+            view.snapshot_trace()
+            result = None
+        else:
+            raise ValueError(f"unknown journal op kind {kind!r}")
+        self.op_seq = seq
+        return result
 
     # ------------------------------------------------------------- ask_all
     def ask_all(self, n: int = 1) -> List[list]:
@@ -595,10 +666,19 @@ class StudyBank:
             led.y_mean[b] = g["y_mean"]
             led.y_std[b] = g["y_std"]
 
-    def save(self, path, iteration: int = 0) -> None:
+    def save(self, path, iteration: int = 0, extra=None) -> None:
         """One-write fleet checkpoint: every ledger array (the pytree
         leaves) plus a JSON meta block (params dicts, best traces, RNG
-        streams) in a single atomically-replaced ``.npz`` file."""
+        streams) in a single atomically-replaced ``.npz`` file.
+
+        ``extra`` is an optional JSON-serializable side channel stored
+        verbatim in the meta block — the durable service keeps its study
+        name table and ask-dedup cache there so one snapshot write covers
+        the whole recovery state.  ``load`` hands it back via
+        ``self.extra``; when omitted, the bank's current ``self.extra``
+        is persisted so callers that set the attribute directly still
+        round-trip.
+        """
         from repro.core.optimizer import _to_jsonable
         led = self.ledger
         for b, v in enumerate(self.studies):
@@ -609,7 +689,10 @@ class StudyBank:
         meta = {
             "version": 1,
             "kind": "study_bank",
+            "rng_kind": RNG_KIND,
             "iteration": iteration,
+            "op_seq": self.op_seq,
+            "extra": self.extra if extra is None else extra,
             "n_studies": self.n_studies,
             "dim": led.dim,
             "bank_rng_state": self._rng.bit_generator.state,
@@ -639,6 +722,13 @@ class StudyBank:
             meta = json.loads(bytes(z["meta"]).decode())
             if meta.get("kind") != "study_bank":
                 raise ValueError("not a study_bank checkpoint")
+            # checkpoints written before the tag existed are all PCG64
+            rng_kind = meta.get("rng_kind", RNG_KIND)
+            if rng_kind != RNG_KIND:
+                raise ValueError(
+                    f"checkpoint packs {rng_kind!r} RNG streams but this "
+                    f"build only decodes {RNG_KIND}; the 6-word rng_state "
+                    "rows would unpack into a different generator's state")
             if meta["n_studies"] != self.n_studies:
                 raise ValueError(
                     f"bank holds {self.n_studies} studies, checkpoint has "
@@ -661,4 +751,6 @@ class StudyBank:
             v._trials = {
                 tid: Trial(tid, dict(params), _ledger=led, _study=b)
                 for tid, params in enumerate(ms["params"])}
+        self.op_seq = int(meta.get("op_seq", 0))
+        self.extra = meta.get("extra")
         return meta["iteration"]

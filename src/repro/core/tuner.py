@@ -80,15 +80,22 @@ class Tuner:
             # wraps it into the paper's batch objective
             objective = sched.make_objective(objective)
         self.objective = objective
-        self.opt = AskTellOptimizer(
-            param_space, optimizer=self.conf["optimizer"],
-            seed=self.conf["seed"], domain_size=self.conf["domain_size"],
-            mc_samples=self.conf["mc_samples"],
-            fit_steps=self.conf["fit_steps"],
-            use_pallas=self.conf["use_pallas"],
-            pallas_interpret=self.conf["pallas_interpret"],
-            refit_every=self.conf["refit_every"],
-            strategy_kwargs=self.conf["strategy_kwargs"])
+        if sched is not None and hasattr(sched, "make_engine"):
+            # the scheduler supplies the ask/tell core itself (e.g.
+            # ServiceScheduler: a remote study on the durable tuning
+            # service, where strategy config lives server-side)
+            self.opt = sched.make_engine(param_space, self.conf)
+        else:
+            self.opt = AskTellOptimizer(
+                param_space, optimizer=self.conf["optimizer"],
+                seed=self.conf["seed"],
+                domain_size=self.conf["domain_size"],
+                mc_samples=self.conf["mc_samples"],
+                fit_steps=self.conf["fit_steps"],
+                use_pallas=self.conf["use_pallas"],
+                pallas_interpret=self.conf["pallas_interpret"],
+                refit_every=self.conf["refit_every"],
+                strategy_kwargs=self.conf["strategy_kwargs"])
         self.space = self.opt.space
         self._iteration = 0
         ckpt = self.conf["checkpoint_path"]

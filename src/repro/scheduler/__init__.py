@@ -3,8 +3,9 @@ from repro.scheduler.base import (AsyncScheduler, BatchToAsyncAdapter,
 from repro.scheduler.distributed import FaultInjection, TaskQueueScheduler
 from repro.scheduler.local import (ProcessScheduler, SerialScheduler,
                                    ThreadScheduler)
+from repro.scheduler.service import ServiceScheduler
 
 __all__ = ["Scheduler", "AsyncScheduler", "TaskHandle",
            "BatchToAsyncAdapter", "as_async", "FaultInjection",
            "TaskQueueScheduler", "ProcessScheduler", "SerialScheduler",
-           "ThreadScheduler"]
+           "ThreadScheduler", "ServiceScheduler"]

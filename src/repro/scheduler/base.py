@@ -108,6 +108,8 @@ class BatchToAsyncAdapter:
         self._queue: List[tuple] = []   # (handle, objective, pinned fn)
         self._dispatcher: Optional[threading.Thread] = None
         self._cv = threading.Condition()
+        self._outstanding = 0           # submitted, not yet done
+        self._closed = False            # shutdown() called: submit refused
         # keyed by the fn object itself, weakly: an ``id(fn)`` key outlives
         # the fn, so a later fn allocated at the recycled address would
         # silently inherit the *old* objective (and every entry would leak
@@ -149,8 +151,13 @@ class BatchToAsyncAdapter:
             return self.scheduler.make_objective(fn), fn
 
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
+        if self._closed:
+            raise RuntimeError("submit() after shutdown(): this adapter is "
+                               "draining/stopped and accepts no new trials")
         handle = TaskHandle(params)
         objective, pin = self._objective_for(fn)
+        with self._cv:
+            self._outstanding += 1
         if self.coalesce:
             with self._cv:
                 self._queue.append((handle, objective, pin))
@@ -174,6 +181,7 @@ class BatchToAsyncAdapter:
                 handle.error = e
             with self._cv:
                 handle.done.set()
+                self._outstanding -= 1
                 self._cv.notify_all()
 
         threading.Thread(target=run, daemon=True,
@@ -227,6 +235,7 @@ class BatchToAsyncAdapter:
         with self._cv:
             for h, _ in items:
                 h.done.set()
+            self._outstanding -= len(items)
             self._cv.notify_all()
 
     def wait_any(self, handles: List[TaskHandle],
@@ -237,6 +246,21 @@ class BatchToAsyncAdapter:
             self._cv.wait_for(
                 lambda: any(h.done.is_set() for h in handles), timeout)
             return [h for h in handles if h.done.is_set()]
+
+    # ------------------------------------------------------- graceful drain
+    def shutdown(self, timeout: Optional[float] = None) -> bool:
+        """Stop accepting submits; with a ``timeout``, block until every
+        in-flight trial has completed (drained) or the deadline passes.
+        ``timeout=None`` closes immediately without waiting.  Returns
+        whether the adapter is fully drained — a service caller snapshots
+        only after a ``True`` here, so a stop can't orphan pending trials.
+        Safe to call more than once."""
+        with self._cv:
+            self._closed = True
+            if timeout is None:
+                return self._outstanding == 0
+            self._cv.wait_for(lambda: self._outstanding == 0, timeout)
+            return self._outstanding == 0
 
 
 class _PollingWaitShim:

@@ -72,6 +72,8 @@ class TaskQueueScheduler:
         self._q: "queue.Queue[Optional[Tuple[_Task, TrialFn]]]" = queue.Queue()
         self._workers: List[threading.Thread] = []
         self._stop = threading.Event()
+        self._draining = threading.Event()
+        self._outstanding = 0           # submitted tasks not yet finished
         self._lock = threading.Lock()
         self._done_cv = threading.Condition()
         self._started = False
@@ -90,10 +92,25 @@ class TaskQueueScheduler:
                 t.start()
                 self._workers.append(t)
 
-    def shutdown(self):
+    def shutdown(self, timeout: Optional[float] = None) -> bool:
+        """Stop the worker pool.  ``timeout=None`` keeps the legacy
+        semantics: stop immediately, abandoning whatever is in flight.
+        With a ``timeout``, first *drain*: new submits are refused while
+        every already-queued task runs to completion (retries included),
+        then the workers are stopped.  Returns whether the queue was fully
+        drained — the durable service checks this before snapshotting so a
+        graceful stop can't orphan pending trials."""
+        drained = True
+        if timeout is not None:
+            self._draining.set()
+            with self._done_cv:
+                self._done_cv.wait_for(
+                    lambda: self._outstanding == 0, timeout)
+                drained = self._outstanding == 0
         self._stop.set()
         for _ in self._workers:
             self._q.put(None)
+        return drained
 
     def _worker_loop(self):
         while not self._stop.is_set():
@@ -134,23 +151,29 @@ class TaskQueueScheduler:
     def _finish(self, task: _Task) -> None:
         # notify under the condition lock: wait_any's predicate check and
         # wait are serialized against this, so completions are never missed
+        # (a retried task is not finished — it re-enqueues without landing
+        # here, so it stays outstanding until its final attempt)
         with self._done_cv:
             task.done.set()
+            self._outstanding -= 1
             self._done_cv.notify_all()
 
     # ------------------------------------------------------------- async API
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> _Task:
-        if self._stop.is_set():
+        if self._stop.is_set() or self._draining.is_set():
             # start() after shutdown() is a no-op (_started stays True), so
             # the task would land in a queue no worker ever drains and
-            # wait_any would hang until its timeout
+            # wait_any would hang until its timeout; during a drain the
+            # whole point is that the in-flight set only shrinks
             raise RuntimeError("submit() after shutdown(): this scheduler's "
-                               "workers have exited; create a new "
-                               "TaskQueueScheduler")
+                               "workers have exited or are draining; create "
+                               "a new TaskQueueScheduler")
         self.start()
         with self._lock:
             seq = self._task_seq
             self._task_seq += 1
+        with self._done_cv:
+            self._outstanding += 1
         task = _Task(params,
                      rng=random.Random(self.faults.seed * 1_000_003 + seq))
         self._q.put((task, fn))

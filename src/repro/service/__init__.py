@@ -1,0 +1,21 @@
+"""Durable ask/tell tuning service: WAL + exact-replay crash recovery.
+
+See ``repro.service.server`` for the write path (journal-then-apply),
+``repro.service.recovery`` for the restart path (snapshot + WAL suffix
+replay), ``repro.service.client`` for the driver-facing client, and
+``repro.service.chaos`` for the SIGKILL harness that proves the
+bit-equal recovery contract.
+"""
+from repro.service.client import (RemoteOptimizer, RemoteTrial,
+                                  ServiceClient, ServiceDown)
+from repro.service.recovery import RecoveryReport, recover
+from repro.service.server import (CrashPoints, ServiceError, TuningService,
+                                  serve, space_from_spec)
+from repro.service.wal import WriteAheadLog, read_records, truncate_to
+
+__all__ = [
+    "RemoteOptimizer", "RemoteTrial", "ServiceClient", "ServiceDown",
+    "RecoveryReport", "recover", "CrashPoints", "ServiceError",
+    "TuningService", "serve", "space_from_spec", "WriteAheadLog",
+    "read_records", "truncate_to",
+]

@@ -382,3 +382,63 @@ def test_coalescing_adapter_keeps_fault_semantics():
         assert h.done.wait(10)
     assert first.error is None and ok.error is None
     assert bad.result is None and isinstance(bad.error, RuntimeError)
+
+
+# --------------------------------------------------------------------------- #
+# graceful drain shutdown
+# --------------------------------------------------------------------------- #
+def test_task_queue_shutdown_drains_in_flight():
+    """shutdown(timeout=) lets queued work finish before stopping the
+    workers, and refuses new submits while draining."""
+    sched = TaskQueueScheduler(n_workers=2)
+    release = __import__("threading").Event()
+
+    def slowish(p):
+        release.wait(10)
+        return trial(p)
+
+    handles = [sched.submit(slowish, {"x": 0.1 * i}) for i in range(4)]
+    drainer = {}
+
+    def do_drain():
+        drainer["drained"] = sched.shutdown(timeout=10.0)
+
+    t = __import__("threading").Thread(target=do_drain)
+    t.start()
+    time.sleep(0.05)          # drain has started: submits must be refused
+    with pytest.raises(RuntimeError, match="drain"):
+        sched.submit(slowish, {"x": 0.9})
+    release.set()
+    t.join(10)
+    assert drainer["drained"] is True
+    assert all(h.done.is_set() and h.error is None for h in handles)
+
+
+def test_task_queue_shutdown_timeout_reports_undrained():
+    sched = TaskQueueScheduler(n_workers=1)
+    sched.submit(lambda p: time.sleep(5) or 0.0, {"x": 0.5})
+    assert sched.shutdown(timeout=0.1) is False
+
+
+def test_batch_adapter_shutdown_drains_and_refuses_submits():
+    release = __import__("threading").Event()
+
+    def gated(p):
+        release.wait(10)
+        return trial(p)
+
+    adapter = BatchToAsyncAdapter(SerialScheduler())
+    handles = [adapter.submit(gated, {"x": 0.2}) for _ in range(3)]
+    out = {}
+    t = __import__("threading").Thread(
+        target=lambda: out.update(d=adapter.shutdown(timeout=10.0)))
+    t.start()
+    time.sleep(0.05)
+    with pytest.raises(RuntimeError, match="shutdown"):
+        adapter.submit(gated, {"x": 0.3})      # submit-during-drain
+    release.set()
+    t.join(10)
+    assert out["d"] is True
+    assert all(h.done.is_set() for h in handles)
+    # already-drained second call is a cheap no-op
+    assert adapter.shutdown() is True

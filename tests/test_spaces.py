@@ -132,3 +132,39 @@ def test_sampling_only_distribution_batch_stable_encoding():
     # monotone in the underlying value
     order = np.argsort([c["g"] for c in s])
     assert (np.diff(enc_batch[order]) >= 0).all()
+
+
+def test_scipy_loguniform_columnar_fast_path_bitwise():
+    """Frozen scipy loguniform gets the closed-form columnar treatment:
+    ``sample_array`` must reproduce scipy's draw AND leave the RNG stream
+    in the identical state (scipy's default _rvs is _ppf(uniform(n)), and
+    loguniform defines no custom _rvs), and ``encode`` must equal its cdf
+    bitwise — otherwise a bank checkpoint written by one path would replay
+    differently under the other."""
+    from scipy.stats import loguniform as sp_loguniform
+    frozen = sp_loguniform(1e-4, 1e-1)
+    space = ParamSpace({"lr": frozen})
+    p = space.params[0]
+    assert p._loguniform_abls is not None      # fast path engaged
+    r_fast, r_ref = np.random.default_rng(7), np.random.default_rng(7)
+    ours = p.sample_array(512, r_fast)
+    ref = np.asarray(frozen.rvs(size=512, random_state=r_ref))
+    np.testing.assert_array_equal(ours, ref)
+    assert r_fast.bit_generator.state == r_ref.bit_generator.state
+    np.testing.assert_array_equal(p.encode(list(ref))[:, 0],
+                                  frozen.cdf(ref))
+    # loc/scale-shifted frozen variant stays exact on the sampling stream
+    shifted = sp_loguniform(2.0, 50.0, loc=1.5, scale=3.0)
+    p2 = ParamSpace({"z": shifted}).params[0]
+    r_fast, r_ref = np.random.default_rng(3), np.random.default_rng(3)
+    np.testing.assert_array_equal(
+        p2.sample_array(256, r_fast),
+        np.asarray(shifted.rvs(size=256, random_state=r_ref)))
+    assert r_fast.bit_generator.state == r_ref.bit_generator.state
+    # out-of-support values clamp into the unit cube instead of NaN/inf
+    enc = p2.encode([0.0, 1.5, 1e9])
+    assert np.isfinite(enc).all()
+    assert (enc >= 0).all() and (enc <= 1).all()
+    # Mango's own loguniform helper has no scipy .dist: fast path stays off
+    assert ParamSpace({"g": loguniform(-3, 3)}).params[0] \
+        ._loguniform_abls is None

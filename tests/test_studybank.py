@@ -272,3 +272,41 @@ def test_bucket_shapes_shared_across_bank():
     assert bank.ledger.gp_capacity >= 64
     for b in range(3):
         assert len(bank.study(b).pending_trials()) == 1
+
+
+# --------------------------------------------------------------------------- #
+# rng kind tag
+# --------------------------------------------------------------------------- #
+def test_pack_rng_state_rejects_non_pcg64():
+    rng = np.random.Generator(np.random.MT19937(0))
+    with pytest.raises(ValueError, match="PCG64"):
+        pack_rng_state(rng)
+
+
+def test_checkpoint_rng_kind_tag_validated(tmp_path):
+    """Checkpoints carry the bit-generator kind; load refuses a mismatch
+    (the 6-word packed rng rows are PCG64-specific) and treats legacy
+    checkpoints without the tag as PCG64."""
+    bank = StudyBank(SPACE, 2, seed=3, mc_samples=32)
+    _run(bank, 2)
+    path = tmp_path / "fleet.npz"
+    bank.save(path, iteration=4)
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["meta"]).decode())
+        arrays = {k: z[k] for k in z.files if k != "meta"}
+    assert meta["rng_kind"] == "PCG64"
+
+    def rewrite(meta_dict, to):
+        np.savez(to, meta=np.frombuffer(
+            json.dumps(meta_dict).encode(), dtype=np.uint8), **arrays)
+
+    bad = tmp_path / "bad.npz"
+    rewrite({**meta, "rng_kind": "MT19937"}, bad)
+    fresh = StudyBank(SPACE, 2, seed=3, mc_samples=32)
+    with pytest.raises(ValueError, match="MT19937"):
+        fresh.load(bad)
+    # legacy (pre-tag) checkpoint: still loads as PCG64
+    legacy_meta = {k: v for k, v in meta.items() if k != "rng_kind"}
+    legacy = tmp_path / "legacy.npz"
+    rewrite(legacy_meta, legacy)
+    assert fresh.load(legacy) == 4
