@@ -405,14 +405,20 @@ class AskTellOptimizer:
         """Observe a configuration that never went through ``ask`` (an
         objective returning params outside its batch — the legacy contract
         lets it).  Enters the ledger directly as observed/failed."""
+        # anything that can fail runs before any state mutates: a bad
+        # config (param missing from the space, un-encodable value) must
+        # not burn a trial id or leave a half-registered phantom trial —
+        # the durable service relies on a failed observe being a no-op
+        params = dict(params)
+        v = float(value)
+        enc = self.space.encode([params])[0]
         led, b = self._led, self._b
         tid = self._next_id
         self._next_id = tid + 1
-        t = Trial(tid, dict(params), _ledger=led, _study=b)
+        t = Trial(tid, params, _ledger=led, _study=b)
         self._trials[tid] = t
-        led.X[b, tid, :] = self.space.encode([t.params])[0]
+        led.X[b, tid, :] = enc
         led.status[b, tid] = S_PENDING
-        v = float(value)
         if np.isfinite(v):
             t.status = OBSERVED
             t.value = v

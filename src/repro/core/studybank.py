@@ -311,6 +311,40 @@ class StudyBank:
         """Sequence number the *next* journaled operation must carry."""
         return self.op_seq + 1
 
+    def validate_op(self, op: Dict[str, Any]) -> None:
+        """Reject a malformed op *before* it is journaled.  Pure check, no
+        state mutated.  The WAL contract is journal-then-apply, so anything
+        appended must be guaranteed to apply — a record that journals and
+        then raises would poison every future replay of the log.  Raises
+        ``ValueError``/``KeyError``/``TypeError`` on a bad op."""
+        kind = op["op"]
+        b = int(op["study"])
+        if not 0 <= b < self.n_studies:
+            raise ValueError(f"op targets study row {b}, bank holds "
+                             f"{self.n_studies}")
+        view = self.studies[b]
+        if kind == "create":
+            float(op.get("sign", 1.0))
+        elif kind == "ask":
+            if int(op["n"]) < 1:
+                raise ValueError("ask(n) requires n >= 1")
+        elif kind in ("tell", "tell_failed"):
+            tid = int(op["trial_id"])
+            if tid not in view._trials:
+                raise KeyError(f"unknown trial id {tid!r} "
+                               "(tell before ask?)")
+            if kind == "tell":
+                float(op["value"])
+        elif kind == "observe":
+            # encode raises KeyError on a param name missing from the
+            # space and TypeError/ValueError on un-encodable values
+            self.space.encode([dict(op["params"])])
+            float(op["value"])
+        elif kind == "trace":
+            pass
+        else:
+            raise ValueError(f"unknown journal op kind {kind!r}")
+
     def apply_op(self, op: Dict[str, Any]):
         """Apply one journaled operation to the bank (the WAL replay entry
         point).  Ops are dicts ``{"seq", "op", "study", ...}``; ``seq``
@@ -339,25 +373,32 @@ class StudyBank:
             raise ValueError(f"journal op targets study row {b}, bank "
                              f"holds {self.n_studies}")
         view = self.studies[b]
-        if kind == "create":
-            view.sign = float(op.get("sign", 1.0))
-            result = view
-        elif kind == "ask":
-            result = view.ask(int(op["n"]))
-        elif kind == "tell":
-            result = view.tell_once(int(op["trial_id"]),
-                                    float(op["value"]))
-        elif kind == "tell_failed":
-            result = view.tell_failed_once(int(op["trial_id"]))
-        elif kind == "observe":
-            result = view.observe_params(dict(op["params"]),
-                                         float(op["value"]))
-        elif kind == "trace":
-            view.snapshot_trace()
-            result = None
-        else:
-            raise ValueError(f"unknown journal op kind {kind!r}")
-        self.op_seq = seq
+        # the seq is consumed even if the apply raises: a journaled record
+        # must never be half-committed — op_seq advancing past it means the
+        # next op gets a fresh seq (no duplicate-seq frames) and replay
+        # re-raises at the same point with the same state, so recovery can
+        # skip the record deterministically instead of wedging the service
+        try:
+            if kind == "create":
+                view.sign = float(op.get("sign", 1.0))
+                result = view
+            elif kind == "ask":
+                result = view.ask(int(op["n"]))
+            elif kind == "tell":
+                result = view.tell_once(int(op["trial_id"]),
+                                        float(op["value"]))
+            elif kind == "tell_failed":
+                result = view.tell_failed_once(int(op["trial_id"]))
+            elif kind == "observe":
+                result = view.observe_params(dict(op["params"]),
+                                             float(op["value"]))
+            elif kind == "trace":
+                view.snapshot_trace()
+                result = None
+            else:
+                raise ValueError(f"unknown journal op kind {kind!r}")
+        finally:
+            self.op_seq = seq
         return result
 
     # ------------------------------------------------------------- ask_all

@@ -151,15 +151,20 @@ class BatchToAsyncAdapter:
             return self.scheduler.make_objective(fn), fn
 
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> TaskHandle:
-        if self._closed:
-            raise RuntimeError("submit() after shutdown(): this adapter is "
-                               "draining/stopped and accepts no new trials")
         handle = TaskHandle(params)
         objective, pin = self._objective_for(fn)
         with self._cv:
+            # closed-check and increment are one critical section:
+            # shutdown() flips _closed under this same lock, so a submit
+            # racing a drain either lands before _closed (counted in
+            # _outstanding, so drained=True waits for it) or raises —
+            # never a trial running after shutdown reported drained
+            if self._closed:
+                raise RuntimeError(
+                    "submit() after shutdown(): this adapter is "
+                    "draining/stopped and accepts no new trials")
             self._outstanding += 1
-        if self.coalesce:
-            with self._cv:
+            if self.coalesce:
                 self._queue.append((handle, objective, pin))
                 if self._dispatcher is None:
                     self._dispatcher = threading.Thread(
@@ -167,7 +172,7 @@ class BatchToAsyncAdapter:
                         name="mango-async-coalesce")
                     self._dispatcher.start()
                 self._cv.notify_all()
-            return handle
+                return handle
 
         def run(_pin_fn=pin):   # keep the wrapped fn alive for this trial
             try:

@@ -102,8 +102,10 @@ class TaskQueueScheduler:
         graceful stop can't orphan pending trials."""
         drained = True
         if timeout is not None:
-            self._draining.set()
             with self._done_cv:
+                # set under the cv: pairs with submit's atomic
+                # check+increment, see there
+                self._draining.set()
                 self._done_cv.wait_for(
                     lambda: self._outstanding == 0, timeout)
                 drained = self._outstanding == 0
@@ -160,20 +162,27 @@ class TaskQueueScheduler:
 
     # ------------------------------------------------------------- async API
     def submit(self, fn: TrialFn, params: Dict[str, Any]) -> _Task:
-        if self._stop.is_set() or self._draining.is_set():
-            # start() after shutdown() is a no-op (_started stays True), so
-            # the task would land in a queue no worker ever drains and
-            # wait_any would hang until its timeout; during a drain the
-            # whole point is that the in-flight set only shrinks
-            raise RuntimeError("submit() after shutdown(): this scheduler's "
-                               "workers have exited or are draining; create "
-                               "a new TaskQueueScheduler")
+        with self._done_cv:
+            # the drain/stop check and the outstanding increment are one
+            # critical section (shutdown sets _draining under this same
+            # cv), so a submit racing shutdown(timeout) either counts
+            # toward the drain or raises — drained=True can't leave a
+            # task running behind the caller's back
+            if self._stop.is_set() or self._draining.is_set():
+                # start() after shutdown() is a no-op (_started stays
+                # True), so the task would land in a queue no worker ever
+                # drains and wait_any would hang until its timeout; during
+                # a drain the whole point is that the in-flight set only
+                # shrinks
+                raise RuntimeError(
+                    "submit() after shutdown(): this scheduler's workers "
+                    "have exited or are draining; create a new "
+                    "TaskQueueScheduler")
+            self._outstanding += 1
         self.start()
         with self._lock:
             seq = self._task_seq
             self._task_seq += 1
-        with self._done_cv:
-            self._outstanding += 1
         task = _Task(params,
                      rng=random.Random(self.faults.seed * 1_000_003 + seq))
         self._q.put((task, fn))

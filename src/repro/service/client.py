@@ -5,9 +5,10 @@ Two layers:
   * ``ServiceClient`` — thin JSON-over-HTTP wrapper, one method per
     endpoint, with bounded retries on connection errors.  Retries are
     safe by construction: every mutating endpoint is idempotent (create
-    by name, ask by ``req_id``, tell by trial id), so a request whose
-    response was lost to a crash can be resent verbatim and lands
-    exactly once.
+    by name, tell by trial id, ask/observe/trace by ``req_id`` — minted
+    here per logical call, before the retry loop, so every resend
+    carries the same id), so a request whose response was lost to a
+    crash can be resent verbatim and lands exactly once.
   * ``RemoteOptimizer`` — duck-types the ``AskTellOptimizer`` surface the
     tuner drivers use (``ask``/``tell``/``tell_failed``/
     ``observe_params``/``snapshot_trace``/``results``/counters), backed
@@ -89,7 +90,8 @@ class ServiceClient:
     def ask(self, name: str, n: int = 1,
             req_id: Optional[str] = None) -> Dict[str, Any]:
         return self._request("POST", self._study_path(name, "ask"),
-                             {"n": n, "req_id": req_id})
+                             {"n": n,
+                              "req_id": req_id or uuid.uuid4().hex})
 
     def tell(self, name: str, trial_id: int, value: float) -> Dict[str, Any]:
         return self._request("POST", self._study_path(name, "tell"),
@@ -99,13 +101,16 @@ class ServiceClient:
         return self._request("POST", self._study_path(name, "tell_failed"),
                              {"trial_id": trial_id})
 
-    def observe(self, name: str, params: Dict[str, Any],
-                value: float) -> Dict[str, Any]:
+    def observe(self, name: str, params: Dict[str, Any], value: float,
+                req_id: Optional[str] = None) -> Dict[str, Any]:
         return self._request("POST", self._study_path(name, "observe"),
-                             {"params": params, "value": value})
+                             {"params": params, "value": value,
+                              "req_id": req_id or uuid.uuid4().hex})
 
-    def trace(self, name: str) -> Dict[str, Any]:
-        return self._request("POST", self._study_path(name, "trace"), {})
+    def trace(self, name: str,
+              req_id: Optional[str] = None) -> Dict[str, Any]:
+        return self._request("POST", self._study_path(name, "trace"),
+                             {"req_id": req_id or uuid.uuid4().hex})
 
     def best(self, name: str) -> Dict[str, Any]:
         return self._request("GET", self._study_path(name, "best"))

@@ -36,6 +36,7 @@ class RecoveryReport:
     replayed: int = 0             # applied (seq > snapshot op_seq)
     skipped: int = 0              # already contained in the snapshot
     truncated_bytes: int = 0      # torn tail cut off the log
+    poisoned: int = 0             # consumed their seq but failed to apply
 
 
 def recover(data_dir, bank,
@@ -65,8 +66,22 @@ def recover(data_dir, bank,
         if int(rec["seq"]) <= bank.op_seq:
             rep.skipped += 1
             continue
-        apply_record(rec)
-        rep.replayed += 1
+        prev = bank.op_seq
+        try:
+            apply_record(rec)
+        except Exception:
+            # ops are validated before journaling, so this is defense in
+            # depth.  apply_op consumes the seq even when the apply raises;
+            # if op_seq advanced, the record is a poison frame — live
+            # serving skipped it the same way, so skipping here preserves
+            # bit-exact replay.  op_seq NOT advancing means a structural
+            # journal error (seq gap/reorder): abort rather than silently
+            # drop the whole suffix.
+            if bank.op_seq == prev:
+                raise
+            rep.poisoned += 1
+        else:
+            rep.replayed += 1
     return rep
 
 

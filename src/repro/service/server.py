@@ -16,11 +16,17 @@ Exactly-once effect on at-least-once delivery:
   * tells are deduped by trial id — a pending trial is resolved once,
     a repeat (client retry, or a WAL suffix overlapping the snapshot)
     is a no-op reply with ``applied: false``;
-  * asks are deduped by client ``req_id`` — a retried ask returns the
-    cached trial ids/params instead of journaling a second draw; the
-    cache rides in the snapshot's ``extra`` block so it survives
-    compaction;
+  * asks, observes and traces are deduped by client ``req_id`` — a
+    retried request returns the cached reply instead of journaling a
+    second op; the reply cache rides in the snapshot's ``extra`` block
+    so it survives compaction;
   * creates are idempotent by study name.
+
+Journal-then-apply requires apply to be infallible once journaled, so
+every op is validated against the bank (``StudyBank.validate_op``)
+*before* the WAL append — a malformed request (``ask`` with ``n<1``, an
+``observe`` whose params don't encode) is rejected with 4xx and never
+reaches the log, where it would poison every future replay.
 
 Degradation: if the WAL volume errors, the service stays up read-only —
 ``best``/``results``/``studies`` keep serving, mutations get 503.
@@ -45,7 +51,7 @@ from repro.service.client import ServiceError
 from repro.service.recovery import CONFIG, SNAPSHOT, WAL_FILE, recover
 from repro.service.wal import WriteAheadLog
 
-ASK_CACHE_CAP = 128     # retained req_id replies per study
+REPLY_CACHE_CAP = 128   # retained req_id replies per study
 
 
 def space_from_spec(spec: Dict[str, Any]) -> Dict[str, Any]:
@@ -148,7 +154,10 @@ class TuningService:
         self.crash = crash or CrashPoints()
         self._lock = threading.RLock()
         self._names: Dict[str, int] = {}
-        self._ask_cache: Dict[int, "OrderedDict[str, List[int]]"] = {}
+        # per-study req_id -> trial-id list: asks cache their proposal ids,
+        # observes the single registered id, traces an empty list (the
+        # reply is rebuilt from the live trials, so status stays current)
+        self._reply_cache: Dict[int, "OrderedDict[str, List[int]]"] = {}
         self.wal_error: Optional[str] = None
         self._ops_since_snapshot = 0
         self._snap_path = os.path.join(self.data_dir, SNAPSHOT)
@@ -162,14 +171,15 @@ class TuningService:
         if not extra:
             return
         self._names = dict(extra.get("names", {}))
-        self._ask_cache = {
+        self._reply_cache = {
             int(b): OrderedDict((rid, list(ids)) for rid, ids in entries)
-            for b, entries in extra.get("ask_cache", {}).items()}
+            for b, entries in extra.get("reply_cache", {}).items()}
 
     def _extra_meta(self) -> Dict[str, Any]:
         return {"names": self._names,
-                "ask_cache": {str(b): [[rid, ids] for rid, ids in od.items()]
-                              for b, od in self._ask_cache.items()}}
+                "reply_cache": {str(b): [[rid, ids]
+                                         for rid, ids in od.items()]
+                                for b, od in self._reply_cache.items()}}
 
     def _row(self, name: str) -> int:
         b = self._names.get(name)
@@ -193,18 +203,25 @@ class TuningService:
         if kind == "create":
             self._names[op["name"]] = b
         result = self.bank.apply_op(op)
-        if kind == "ask" and op.get("req_id") is not None:
-            od = self._ask_cache.setdefault(b, OrderedDict())
-            od[op["req_id"]] = [t.id for t in result]
-            while len(od) > ASK_CACHE_CAP:
-                od.popitem(last=False)
+        if op.get("req_id") is not None:
+            payload = {"ask": lambda: [t.id for t in result],
+                       "observe": lambda: [result.id],
+                       "trace": lambda: []}.get(kind)
+            if payload is not None:
+                od = self._reply_cache.setdefault(b, OrderedDict())
+                od[op["req_id"]] = payload()
+                while len(od) > REPLY_CACHE_CAP:
+                    od.popitem(last=False)
         return result
 
     def _commit(self, op: Dict[str, Any]):
-        """Assign the next seq, journal (fsync), then apply.  Caller must
-        hold the lock — WAL order must equal apply order for replay to be
-        exact."""
+        """Validate, assign the next seq, journal (fsync), then apply.
+        Caller must hold the lock — WAL order must equal apply order for
+        replay to be exact.  Validation comes first: once a record is
+        fsync'd it WILL be replayed on every restart, so nothing that
+        can't apply may reach the log."""
         op = dict(op)
+        self.bank.validate_op(op)
         op["seq"] = self.bank.next_op_seq()
         kind = op["op"]
         self.crash.check(f"{kind}.before_journal")
@@ -253,7 +270,7 @@ class TuningService:
             b = self._row(name)
             view = self.bank.studies[b]
             if req_id is not None:
-                cached = self._ask_cache.get(b, {}).get(req_id)
+                cached = self._reply_cache.get(b, {}).get(req_id)
                 if cached is not None:
                     return {"trials": [self._trial_json(view._trials[i])
                                        for i in cached], "cached": True}
@@ -288,23 +305,33 @@ class TuningService:
                                        "trial_id": int(trial_id), **extra})
             return {**self._trial_json(t), "applied": applied}
 
-    def observe(self, name: str, params: Dict[str, Any],
-                value: float) -> Dict[str, Any]:
+    def observe(self, name: str, params: Dict[str, Any], value: float,
+                req_id: Optional[str] = None) -> Dict[str, Any]:
         from repro.core.optimizer import _to_jsonable
         with self._lock:
             b = self._row(name)
+            if req_id is not None:
+                cached = self._reply_cache.get(b, {}).get(req_id)
+                if cached is not None:
+                    view = self.bank.studies[b]
+                    return {**self._trial_json(view._trials[cached[0]]),
+                            "cached": True}
             self._check_writable()
             t = self._commit({"op": "observe", "study": b,
                               "params": _to_jsonable(dict(params)),
-                              "value": float(value)})
-            return self._trial_json(t)
+                              "value": float(value), "req_id": req_id})
+            return {**self._trial_json(t), "cached": False}
 
-    def trace(self, name: str) -> Dict[str, Any]:
+    def trace(self, name: str,
+              req_id: Optional[str] = None) -> Dict[str, Any]:
         with self._lock:
             b = self._row(name)
+            if req_id is not None \
+                    and req_id in self._reply_cache.get(b, {}):
+                return {"ok": True, "cached": True}
             self._check_writable()
-            self._commit({"op": "trace", "study": b})
-            return {"ok": True}
+            self._commit({"op": "trace", "study": b, "req_id": req_id})
+            return {"ok": True, "cached": False}
 
     def best(self, name: str) -> Dict[str, Any]:
         from repro.core.optimizer import _to_jsonable
@@ -450,9 +477,11 @@ class _Handler(BaseHTTPRequestHandler):
                             name, body["trial_id"]))
                     if verb == "observe":
                         return self._reply(200, svc.observe(
-                            name, body["params"], body["value"]))
+                            name, body["params"], body["value"],
+                            body.get("req_id")))
                     if verb == "trace":
-                        return self._reply(200, svc.trace(name))
+                        return self._reply(200, svc.trace(
+                            name, body.get("req_id")))
             raise ServiceError(404, f"no route {method} {self.path}")
         except ServiceError as e:
             self._reply(e.status, {"error": str(e)})

@@ -67,6 +67,21 @@ def test_double_tell_rejected():
         opt.tell_failed(t.id)
 
 
+def test_observe_params_invalid_leaves_state_untouched():
+    """A failing observe must be a no-op: no phantom trial, no burned id.
+    The durable service journals observes before applying them, so live
+    state diverging from what replay reconstructs would break bit-exact
+    recovery."""
+    opt = AskTellOptimizer(SPACE, seed=0, **FAST)
+    with pytest.raises(KeyError):
+        opt.observe_params({"bogus": 1.0}, 0.5)      # not in the space
+    with pytest.raises(TypeError):
+        opt.observe_params({"x": 0.5, "y": 0.5}, None)
+    assert opt.num_trials == 0 and opt.n_observed == 0
+    t = opt.observe_params({"x": 0.5, "y": 0.5}, 0.5)
+    assert t.id == 0 and t.status == "observed"
+
+
 def test_failed_and_nonfinite_trials_never_observed():
     opt = AskTellOptimizer(SPACE, seed=0, **FAST)
     a, b, c = opt.ask(3)

@@ -442,3 +442,57 @@ def test_batch_adapter_shutdown_drains_and_refuses_submits():
     assert all(h.done.is_set() for h in handles)
     # already-drained second call is a cheap no-op
     assert adapter.shutdown() is True
+
+
+def test_batch_adapter_submit_shutdown_race_cannot_orphan():
+    """submit's closed-check and outstanding-increment are one critical
+    section under the adapter lock: a submit racing shutdown(timeout) is
+    either counted by the drain or refused.  drained=True therefore
+    guarantees every accepted trial completed — the contract the durable
+    service snapshots on."""
+    import threading
+    for _ in range(25):
+        adapter = BatchToAsyncAdapter(SerialScheduler())
+        accepted = []
+        barrier = threading.Barrier(2)
+
+        def spam(adapter=adapter, accepted=accepted, barrier=barrier):
+            barrier.wait()
+            for i in range(100):
+                try:
+                    accepted.append(adapter.submit(trial, {"x": 0.01 * i}))
+                except RuntimeError:
+                    return
+
+        t = threading.Thread(target=spam)
+        t.start()
+        barrier.wait()
+        assert adapter.shutdown(timeout=10.0) is True
+        t.join(10)
+        assert all(h.done.is_set() for h in accepted)
+
+
+def test_task_queue_submit_shutdown_race_cannot_orphan():
+    """Same contract for TaskQueueScheduler: the drain check and the
+    outstanding increment share the completion cv, so a drained=True
+    can't leave a racing submit's task in the queue."""
+    import threading
+    for _ in range(10):
+        sched = TaskQueueScheduler(n_workers=2)
+        accepted = []
+        barrier = threading.Barrier(2)
+
+        def spam(sched=sched, accepted=accepted, barrier=barrier):
+            barrier.wait()
+            for i in range(100):
+                try:
+                    accepted.append(sched.submit(trial, {"x": 0.01 * i}))
+                except RuntimeError:
+                    return
+
+        t = threading.Thread(target=spam)
+        t.start()
+        barrier.wait()
+        assert sched.shutdown(timeout=10.0) is True
+        t.join(10)
+        assert all(h.done.is_set() for h in accepted)

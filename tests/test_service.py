@@ -210,6 +210,86 @@ def test_recovery_matches_uninterrupted_oracle(tmp_path):
     oracle.close()
 
 
+def test_invalid_ops_rejected_before_journal(tmp_path):
+    """Journal-then-apply requires apply to be infallible once journaled:
+    a malformed op (ask n<1, observe params that don't encode) must be
+    rejected BEFORE the WAL append, or the fsync'd poison frame would
+    re-raise on every restart and wedge the service."""
+    svc = _svc(tmp_path)
+    svc.create_study("a")
+    svc.ask("a", 1, req_id="r")
+    n_wal = len(wal_suffix(svc.data_dir))
+    seq = svc.bank.op_seq
+    with pytest.raises(ValueError, match="n >= 1"):
+        svc.ask("a", 0, req_id="bad")
+    with pytest.raises(KeyError):
+        svc.observe("a", {"bogus": 1.0}, 0.5)
+    # nothing journaled, no seq burned: the next valid op extends cleanly
+    assert len(wal_suffix(svc.data_dir)) == n_wal
+    assert svc.bank.op_seq == seq
+    svc.tell("a", 0, 1.0)
+    svc.close()
+    svc2 = _svc(tmp_path)            # restart replays without error
+    assert svc2.recovery.poisoned == 0
+    assert svc2.bank.op_seq == seq + 1
+    svc2.close()
+
+
+def test_poison_wal_record_skipped_on_recovery(tmp_path):
+    """Defense in depth: should a journaled record still fail to apply
+    (version skew, hand-edited log), its seq is consumed, recovery skips
+    the poison frame, and the service starts with no seq collision."""
+    svc = _svc(tmp_path)
+    svc.create_study("a")
+    svc.ask("a", 1, req_id="r")
+    seq = svc.bank.op_seq
+    data_dir = svc.data_dir
+    svc.close()
+    wal = WriteAheadLog(os.path.join(data_dir, WAL_FILE))
+    wal.append({"seq": seq + 1, "op": "frobnicate", "study": 0})
+    wal.close()
+    svc2 = _svc(tmp_path)
+    assert svc2.recovery.poisoned == 1
+    assert svc2.bank.op_seq == seq + 1       # the poison seq is consumed
+    svc2.tell("a", 0, 1.0)                   # fresh ops get fresh seqs
+    assert wal_suffix(data_dir)[-1]["seq"] == seq + 2
+    svc2.close()
+    # a seq GAP is a structural journal error, not a poison record:
+    # recovery must refuse rather than silently drop the suffix
+    wal = WriteAheadLog(os.path.join(data_dir, WAL_FILE))
+    wal.append({"seq": seq + 10, "op": "trace", "study": 0})
+    wal.close()
+    with pytest.raises(ValueError, match="does not extend"):
+        _svc(tmp_path)
+
+
+def test_observe_trace_req_id_dedup(tmp_path):
+    """observe/trace retries land exactly once: same req_id replies from
+    the cache without journaling, and the cache is rebuilt by WAL replay
+    so a retry crossing a crash still dedups."""
+    svc = _svc(tmp_path)
+    svc.create_study("a")
+    r1 = svc.observe("a", {"x": 0.5, "lr": 1e-2}, 1.0, req_id="o1")
+    n_wal = len(wal_suffix(svc.data_dir))
+    r2 = svc.observe("a", {"x": 0.5, "lr": 1e-2}, 1.0, req_id="o1")
+    assert r2["cached"] and r2["id"] == r1["id"]
+    assert len(wal_suffix(svc.data_dir)) == n_wal
+    assert svc.best("a")["n_observed"] == 1
+    assert svc.trace("a", req_id="t1") == {"ok": True, "cached": False}
+    n_wal = len(wal_suffix(svc.data_dir))
+    assert svc.trace("a", req_id="t1")["cached"]
+    assert len(wal_suffix(svc.data_dir)) == n_wal
+    assert svc.bank.studies[0]._best_trace == [1.0]
+    svc.close()
+    svc2 = _svc(tmp_path)
+    assert svc2.observe("a", {"x": 0.5, "lr": 1e-2}, 1.0,
+                        req_id="o1")["cached"]
+    assert svc2.trace("a", req_id="t1")["cached"]
+    assert svc2.best("a")["n_observed"] == 1
+    assert svc2.bank.studies[0]._best_trace == [1.0]
+    svc2.close()
+
+
 def test_wal_failure_degrades_to_read_only(tmp_path):
     svc = _svc(tmp_path)
     svc.create_study("a")
