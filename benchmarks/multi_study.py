@@ -146,16 +146,14 @@ def run_retrace_sweep(max_obs=1024, n_mc=64, n_studies=2, seed=0):
     """Grow one bank 64 -> ``max_obs`` observations, asking at every
     bucket edge and at interior points; count jit cache entries beyond
     the one compile each entry point owes per bucket shape."""
+    from repro.analysis.sanitizers import no_retrace
     from repro.core import StudyBank
-    from repro.core import gp as gp_lib
     from repro.core.studybank import _pow2
 
     bank = StudyBank(_space(), n_studies, optimizer="bayesian", seed=seed,
                      mc_samples=n_mc)
     led = bank.ledger
     rng = np.random.default_rng(seed)
-    # baseline jit-cache sizes: the throughput phase ran in this process
-    base = {k: f._cache_size() for k, f in gp_lib.BANK_JITS.items()}
 
     # n_obs targets: for each bucket edge E (na jumps at n_obs = E where
     # _pow2(E + pend_cap + 1) doubles), visit E-1, E, E+1, plus a mid-bucket
@@ -170,38 +168,39 @@ def run_retrace_sweep(max_obs=1024, n_mc=64, n_studies=2, seed=0):
     targets = sorted(t for t in set(targets) if 58 <= t <= max_obs - 5)
 
     propose_buckets, fit_buckets = set(), set()
-    retraces = 0
-    for k in targets:
-        for b in range(n_studies):
-            add = k - int(led.n_observed()[b])
-            _seed_study(bank.study(b), add, rng)
-        na = _pow2(max(16, k + pend_cap + n))
-        propose_buckets.add(na)
-        due = ((led.have_fit == 0) |
-               (led.n_observed() - led.n_fit >= bank.refit_every))
-        if due.any():
-            fit_buckets.add(na)
-        # two asks per target: the first may compile (bucket boundary),
-        # the second must be a pure cache hit
-        for _ in range(2):
-            asked = bank.ask_all(n)
-            for b, ts in enumerate(asked):
-                for t in ts:
-                    bank.tell_failed(b, t.id)
-    # expected compiles per staged entry point: one per na bucket it is
-    # dispatched at.  prescale_C's shape depends only on mc_samples (one
-    # bucket for the whole sweep); absorb never runs (no trial is in
-    # flight at ask time); the fit program runs only at fit-due targets.
-    nb = len(propose_buckets)
-    expected = {"bank_factors": nb, "bank_prescale_X": nb,
-                "bank_prescale_C": 1, "bank_absorb": 0, "bank_dist": nb,
-                "bank_exp": nb, "bank_pick": nb,
-                "fit_hypers_bank": len(fit_buckets)}
-    cache = {k: f._cache_size() - base[k]
-             for k, f in gp_lib.BANK_JITS.items()}
-    retraces = sum(max(0, cache[k] - expected[k]) for k in cache)
-    detail = ",".join(f"{k}={cache[k]}/{expected[k]}" for k in cache
-                      if cache[k] != expected[k]) or "all=expected"
+    # audit the whole sweep with the shared sanitizer (jits=None ->
+    # gp.BANK_JITS; base snapshot absorbs the throughput phase that ran
+    # in this process); the benchmark turns violations into exit 1
+    # itself, so no raise here
+    with no_retrace(raise_on_violation=False) as rep:
+        for k in targets:
+            for b in range(n_studies):
+                add = k - int(led.n_observed()[b])
+                _seed_study(bank.study(b), add, rng)
+            na = _pow2(max(16, k + pend_cap + n))
+            propose_buckets.add(na)
+            due = ((led.have_fit == 0) |
+                   (led.n_observed() - led.n_fit >= bank.refit_every))
+            if due.any():
+                fit_buckets.add(na)
+            # two asks per target: the first may compile (bucket boundary),
+            # the second must be a pure cache hit
+            for _ in range(2):
+                asked = bank.ask_all(n)
+                for b, ts in enumerate(asked):
+                    for t in ts:
+                        bank.tell_failed(b, t.id)
+        # expected compiles per staged entry point: one per na bucket it is
+        # dispatched at.  prescale_C's shape depends only on mc_samples (one
+        # bucket for the whole sweep); absorb never runs (no trial is in
+        # flight at ask time); the fit program runs only at fit-due targets.
+        nb = len(propose_buckets)
+        rep.expected = {"bank_factors": nb, "bank_prescale_X": nb,
+                        "bank_prescale_C": 1, "bank_absorb": 0,
+                        "bank_dist": nb, "bank_exp": nb, "bank_pick": nb,
+                        "fit_hypers_bank": len(fit_buckets)}
+    retraces = rep.violations
+    detail = rep.detail() or "all=expected"
     _emit("steady_state_retrace", float(retraces),
           f"retraces={retraces},boundaries={nb},{detail}")
     return retraces

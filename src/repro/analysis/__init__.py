@@ -1,0 +1,14 @@
+"""repro.analysis: repo-specific static analysis + runtime sanitizers.
+
+  * ``python -m repro.analysis src/ --baseline .repro-lint-baseline`` —
+    the blocking CI lint gate (stdlib-only, no jax import).
+  * ``repro.analysis.sanitizers`` — ``no_retrace``/``no_transfer``/
+    ``assert_holds`` runtime guards (imported lazily; they need jax).
+
+See ``docs/analysis.md`` for the rule catalog and workflow.
+"""
+from repro.analysis.baseline import Baseline
+from repro.analysis.lint import Finding, LintResult, Module, Rule, lint_paths
+
+__all__ = ["Baseline", "Finding", "LintResult", "Module", "Rule",
+           "lint_paths"]

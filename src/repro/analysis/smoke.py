@@ -1,0 +1,56 @@
+"""Sanitizer smoke: steady-state bank serving under both runtime guards.
+
+``python -m repro.analysis.smoke`` warms a small StudyBank into its
+shape bucket, then drives ask/tell rounds with
+
+  * ``no_transfer()`` — any implicit device->host read raises, and
+  * ``no_retrace()`` — any jit compile of a ``gp.BANK_JITS`` entry point
+    raises,
+
+so the CI smoke job proves the PR 4/6 steady-state contract (zero hidden
+syncs, zero retraces per warm ask) end to end, not just via unit tests.
+Exit 0 prints PASS; any violation raises and exits nonzero.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def run(n_studies: int = 4, warm_rounds: int = 3, rounds: int = 6,
+        verbose: bool = True) -> int:
+    from scipy import stats
+
+    from repro.analysis.sanitizers import no_retrace, no_transfer
+    from repro.core import StudyBank
+
+    space = {"x": stats.uniform(0, 1), "y": stats.uniform(-1, 2)}
+    bank = StudyBank(space, n_studies, optimizer="bayesian", seed=0,
+                     mc_samples=32)
+
+    def objective(p):
+        return -(p["x"] - 0.3) ** 2 - (p["y"] - 0.5) ** 2
+
+    def drive(n_rounds):
+        for _ in range(n_rounds):
+            for b, ts in enumerate(bank.ask_all(1)):
+                for t in ts:
+                    bank.tell(b, t.id, objective(t.params))
+
+    # warmup: the GP pipeline first dispatches once a study has >= 2
+    # observations (round 3), compiling the bucket's programs and running
+    # the first hyper fit
+    drive(warm_rounds)
+    # audited steady state: stay inside the na=16 bucket (observations
+    # stay well under 16 - pend_cap - n), so not a single compile — and
+    # not one implicit device->host transfer — is allowed
+    with no_transfer(), no_retrace():
+        drive(rounds)
+    if verbose:
+        print(f"sanitizer smoke PASS: {rounds} steady-state ask_all "
+              f"rounds x {n_studies} studies under no_transfer() + "
+              "no_retrace()")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -710,9 +710,9 @@ class GaussianProcess:
                                      st.ls, st.var, st.noise)
         y = st.y.copy()
         y[st.n] = (float(y_raw) - st.y_mean) / st.y_std
-        return dataclasses.replace(st, X=np.asarray(X), y=y,
-                                   mask=np.asarray(mask), L=L, n=st.n + 1,
-                                   Linv=Linv)
+        X, mask = jax.device_get((X, mask))  # explicit host-pipeline exit
+        return dataclasses.replace(st, X=X, y=y, mask=mask, L=L,
+                                   n=st.n + 1, Linv=Linv)
 
     def observe(self, X: np.ndarray, y: np.ndarray) -> GPState:
         """Incremental fit on the full observation history (X, y)."""
@@ -828,8 +828,9 @@ class GaussianProcess:
                               jnp.asarray(st.mask), st.L,
                               jnp.asarray(Xs, dtype=jnp.float32),
                               st.ls, st.var, st.noise)
-        mu = np.asarray(mu) * st.y_std + st.y_mean
-        sd = np.sqrt(np.asarray(var_s)) * st.y_std
+        mu, var_s = jax.device_get((mu, var_s))  # one explicit exit sync
+        mu = mu * st.y_std + st.y_mean
+        sd = np.sqrt(var_s) * st.y_std
         return mu, sd
 
     def hallucinate(self, st: GPState, x_new: np.ndarray) -> GPState:
@@ -857,6 +858,6 @@ class GaussianProcess:
                                      st.ls, st.var, st.noise)
         y = st.y.copy()
         y[st.n] = float(mu_std[0])
-        return dataclasses.replace(
-            st, X=np.asarray(X), y=y, mask=np.asarray(mask), L=L, n=st.n + 1,
-            Linv=Linv)
+        X, mask = jax.device_get((X, mask))  # explicit host-pipeline exit
+        return dataclasses.replace(st, X=X, y=y, mask=mask, L=L,
+                                   n=st.n + 1, Linv=Linv)

@@ -40,6 +40,7 @@ compute path (what ``ask`` dispatches) is unchanged.
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
@@ -48,7 +49,7 @@ import numpy as np
 from repro.core.spaces import ParamSpace
 from repro.core.strategies import STRATEGIES
 from repro.core.studybank import (S_FAILED, S_OBSERVED, S_PENDING,
-                                  StudyLedger)
+                                  StudyLedger, rng_from_state)
 
 PENDING = "pending"
 OBSERVED = "observed"
@@ -504,8 +505,7 @@ class AskTellOptimizer:
         self._obs_count = 1 + max(
             (t.obs_seq for t in self._trials.values()
              if t.obs_seq is not None), default=-1)
-        self._rng = np.random.default_rng()
-        self._rng.bit_generator.state = sd["rng_state"]
+        self._rng = rng_from_state(sd["rng_state"])
         self._gp_snapshot = sd.get("gp")
         self._strat = None   # rebuilt (with GP replay) on the next ask
 
@@ -515,9 +515,12 @@ class AskTellOptimizer:
         one checkpoint format both drivers share)."""
         p = Path(path)
         tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"iteration": iteration,
-                                   "optimizer": self.state_dict()}))
-        tmp.replace(p)  # atomic swap: a crash never corrupts the checkpoint
+        with open(tmp, "w") as fh:
+            fh.write(json.dumps({"iteration": iteration,
+                                 "optimizer": self.state_dict()}))
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, p)  # atomic swap: a crash never publishes a torn file
 
     def load(self, path) -> int:
         """Load a ``save`` checkpoint; returns the stored iteration."""

@@ -78,14 +78,21 @@ def pack_rng_state(rng: np.random.Generator) -> np.ndarray:
                      st["has_uint32"], st["uinteger"]], dtype=_U64)
 
 
+def rng_from_state(state: Dict[str, Any]) -> np.random.Generator:
+    """Generator rebuilt from a serialized bit-generator state.  The
+    explicit seed is a placeholder (the state overwrite replaces it) so
+    restoring a stream never draws OS entropy."""
+    rng = np.random.default_rng(0)
+    rng.bit_generator.state = state
+    return rng
+
+
 def unpack_rng_state(words: np.ndarray) -> np.random.Generator:
     w = [int(x) for x in words]
-    rng = np.random.default_rng()
-    rng.bit_generator.state = {
+    return rng_from_state({
         "bit_generator": "PCG64",
         "state": {"state": w[0] | (w[1] << 64), "inc": w[2] | (w[3] << 64)},
-        "has_uint32": w[4], "uinteger": w[5]}
-    return rng
+        "has_uint32": w[4], "uinteger": w[5]})
 
 
 class StudyLedger:
@@ -473,7 +480,7 @@ class StudyBank:
                                      n, na)
         else:
             idx = self._dispatch_gp(C, k_obs, k_pend, n, na, pend_cap)
-        idx = np.asarray(idx)
+        idx = jax.device_get(idx)   # the one designed exit sync per ask
         dev = np.nonzero(n_obs >= 2)[0]
         flat = (dev[:, None] * n_mc + idx[dev]).astype(np.int64)  # (k, n)
         cfgs = self.space.configs_at(cols, flat.ravel())
@@ -539,11 +546,13 @@ class StudyBank:
             Xd, yraw, mask, led.log_ls, led.log_var, led.log_noise,
             steps=self.fit_steps)
         sel = np.nonzero(due)[0]
-        led.log_ls[sel] = np.asarray(lls)[sel]
-        led.log_var[sel] = np.asarray(lv)[sel]
-        led.log_noise[sel] = np.asarray(ln)[sel]
-        led.y_mean[sel] = np.asarray(ym)[sel]
-        led.y_std[sel] = np.asarray(ys)[sel]
+        # one explicit exit transfer for all five hyper arrays
+        lls, lv, ln, ym, ys = jax.device_get((lls, lv, ln, ym, ys))
+        led.log_ls[sel] = lls[sel]
+        led.log_var[sel] = lv[sel]
+        led.log_noise[sel] = ln[sel]
+        led.y_mean[sel] = ym[sel]
+        led.y_std[sel] = ys[sel]
         led.n_fit[sel] = k_obs[sel]
         led.have_fit[sel] = 1
         led.obs_stamp += 1    # new hypers/standardization: factors stale
@@ -584,17 +593,19 @@ class StudyBank:
             from repro.core.strategies import n_top_candidates
             top_frac = self.strategy_kwargs.get("top_frac", 0.2)
             n_top = n_top_candidates(C.shape[1], n, top_frac)
-            keys = np.stack([
-                np.asarray(jax.random.PRNGKey(int(led.ask_count[b])))
-                for b in range(led.n_studies)])
+            # one vmap'd seeding dispatch for the whole bank (J101/J102:
+            # a per-study PRNGKey loop is B device calls + B host reads)
+            keys = jax.vmap(jax.random.PRNGKey)(
+                jnp.asarray(led.ask_count[:led.n_studies], jnp.uint32))
             idx, L, Linv = acq_lib.fused_cluster_propose_bank(
                 Xd, z, mask, Pd, k_pend.astype(np.float32), C, ls, var,
                 noise, k_obs.astype(np.float32), np.float32(dom), keys,
                 batch_size=n, n_top=n_top, pend_cap=pend_cap,
                 use_pallas=False, interpret=self.pallas_interpret)
             led.ensure_gp_capacity(na)
-            led.L[:, :na, :na] = np.asarray(L)
-            led.Linv[:, :na, :na] = np.asarray(Linv)
+            L_host, Linv_host = jax.device_get((L, Linv))
+            led.L[:, :na, :na] = L_host
+            led.Linv[:, :na, :na] = Linv_host
             return idx
         cache = self._gp_cache
         if cache is None or cache["key"] != key:
@@ -612,8 +623,9 @@ class StudyBank:
                 "ls": jnp.asarray(ls), "var": jnp.asarray(var),
                 "noise": jnp.asarray(noise)}
             led.ensure_gp_capacity(na)
-            led.L[:, :na, :na] = np.asarray(L)
-            led.Linv[:, :na, :na] = np.asarray(Linv)
+            L_host, Linv_host = jax.device_get((L, Linv))
+            led.L[:, :na, :na] = L_host
+            led.Linv[:, :na, :na] = Linv_host
         # candidate-dependent stages (every ask)
         Cs = gp_lib.bank_prescale_C(C, cache["ls"])
         Xs, z, maskd = cache["Xs"], cache["z"], cache["mask"]
@@ -693,8 +705,7 @@ class StudyBank:
         if sd["n_studies"] != self.n_studies:
             raise ValueError(f"bank holds {self.n_studies} studies, "
                              f"snapshot has {sd['n_studies']}")
-        self._rng = np.random.default_rng()
-        self._rng.bit_generator.state = sd["rng_state"]
+        self._rng = rng_from_state(sd["rng_state"])
         for v, s in zip(self.studies, sd["studies"]):
             v.load_state_dict(s)      # resets the ledger row first
         led = self.ledger
@@ -752,6 +763,8 @@ class StudyBank:
         with open(tmp, "wb") as fh:
             np.savez(fh, meta=np.frombuffer(
                 json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+            fh.flush()
+            os.fsync(fh.fileno())
         os.replace(tmp, p)  # atomic: a crash never corrupts the checkpoint
 
     def load(self, path) -> int:
@@ -780,8 +793,7 @@ class StudyBank:
         for name in StudyLedger.ARRAY_FIELDS:
             setattr(led, name, arrays[name])
         led.obs_stamp += 1   # wholesale array swap: device cache is stale
-        self._rng = np.random.default_rng()
-        self._rng.bit_generator.state = meta["bank_rng_state"]
+        self._rng = rng_from_state(meta["bank_rng_state"])
         for b, v in enumerate(self.studies):
             ms = meta["studies"][b]
             v.sign = ms["sign"]

@@ -242,7 +242,8 @@ class TPEStrategy(BaseStrategy):
         picks = fused_tpe_propose(
             Xb, yb, Cb, meta, batch_size=batch_size, d_true=d,
             use_pallas=self.use_pallas, interpret=self.pallas_interpret)
-        return [int(i) for i in np.asarray(picks)]
+        picks = jax.device_get(picks)  # one explicit exit sync
+        return [int(i) for i in picks]
 
 
 STRATEGIES["tpe"] = TPEStrategy

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,7 +44,8 @@ def score_cov(cands, X, mask, Linv, alpha, ls, var, noise, *,
         jnp.asarray(Linv, jnp.float32), jnp.asarray(alpha, jnp.float32),
         jnp.asarray(var, jnp.float32), jnp.asarray(noise, jnp.float32),
         block_s=block_s, interpret=interpret)
-    return np.asarray(mu)[:S], np.asarray(sig2)[:S]
+    mu, sig2 = jax.device_get((mu, sig2))  # one explicit adapter exit
+    return mu[:S], sig2[:S]
 
 
 def gp_mean_std(st, cands, interpret: bool = True):

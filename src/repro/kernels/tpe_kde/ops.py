@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,10 +51,10 @@ def parzen_logdens(cands, pts, *, bw=None, block_s: int = 256,
     w = np.zeros(npad, np.float32)
     w[:n] = 1.0
     if bw is None:
-        bw = float(scott_bandwidth(jnp.float32(n), d))
+        bw = float(jax.device_get(scott_bandwidth(jnp.float32(n), d)))
     inv2bw2 = np.float32(0.5 / (float(bw) ** 2))
     scal = np.array([[inv2bw2, 1.0 / max(n, 1), 0.0, 0.0]], np.float32)
     out = parzen_logdens_pallas(
         jnp.asarray(cb), jnp.asarray(xb), jnp.asarray(w),
         jnp.asarray(scal), d_true=d, block_s=block_s, interpret=interpret)
-    return np.asarray(out)[:m]
+    return jax.device_get(out)[:m]

@@ -28,6 +28,8 @@ from __future__ import annotations
 import threading
 import time
 import weakref
+
+from repro.analysis.sanitizers import assert_holds
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 TrialFn = Callable[[Dict[str, Any]], float]
@@ -263,9 +265,15 @@ class BatchToAsyncAdapter:
         with self._cv:
             self._closed = True
             if timeout is None:
-                return self._outstanding == 0
-            self._cv.wait_for(lambda: self._outstanding == 0, timeout)
-            return self._outstanding == 0
+                return self._drained_locked()
+            self._cv.wait_for(self._drained_locked, timeout)
+            return self._drained_locked()
+
+    def _drained_locked(self) -> bool:
+        """Caller must hold ``_cv`` — ``_outstanding`` is only coherent
+        under it (wait_for re-acquires before each predicate call)."""
+        assert_holds(self._cv)
+        return self._outstanding == 0
 
 
 class _PollingWaitShim:

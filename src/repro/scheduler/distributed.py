@@ -27,6 +27,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.analysis.sanitizers import assert_holds
 from repro.scheduler.base import Objective, TaskHandle, TrialFn
 
 
@@ -106,9 +107,8 @@ class TaskQueueScheduler:
                 # set under the cv: pairs with submit's atomic
                 # check+increment, see there
                 self._draining.set()
-                self._done_cv.wait_for(
-                    lambda: self._outstanding == 0, timeout)
-                drained = self._outstanding == 0
+                self._done_cv.wait_for(self._drained_locked, timeout)
+                drained = self._drained_locked()
         self._stop.set()
         for _ in self._workers:
             self._q.put(None)
@@ -198,6 +198,12 @@ class TaskQueueScheduler:
             self._done_cv.wait_for(
                 lambda: any(h.done.is_set() for h in handles), timeout)
             return [h for h in handles if h.done.is_set()]
+
+    def _drained_locked(self) -> bool:
+        """Caller must hold ``_done_cv`` — ``_outstanding`` is only
+        coherent under it (wait_for re-acquires before each call)."""
+        assert_holds(self._done_cv)
+        return self._outstanding == 0
 
     def gather(self, tasks: List[_Task], timeout: Optional[float] = None
                ) -> Tuple[List[float], List[Dict[str, Any]]]:

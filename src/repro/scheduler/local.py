@@ -7,11 +7,14 @@ drive ``AsyncTuner``'s completion-event loop.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import logging
 import threading
 import time
 from typing import Any, Dict, List, Optional
 
 from repro.scheduler.base import BatchSchedulerBase, Objective, TrialFn
+
+_log = logging.getLogger(__name__)
 
 
 class SerialScheduler(BatchSchedulerBase):
@@ -24,8 +27,10 @@ class SerialScheduler(BatchSchedulerBase):
                 try:
                     evals.append(float(trial_fn(par)))
                     params.append(par)
-                except Exception:
-                    pass  # dropped -> tuner never observes it
+                except Exception as e:
+                    # dropped -> tuner never observes it (paper's
+                    # fault-tolerance contract), but the drop is visible
+                    _log.debug("trial dropped (%s): %r", par, e)
             return evals, params
 
         return objective
@@ -69,8 +74,9 @@ class ThreadScheduler(BatchSchedulerBase):
                     with cv:
                         evals.append(v)
                         params.append(par)
-                except Exception:
-                    pass  # dropped -> tuner never observes it
+                except Exception as e:
+                    # dropped -> tuner never observes it, but visibly
+                    _log.debug("trial dropped (%s): %r", par, e)
                 finally:
                     with cv:
                         state["left"] -= 1
@@ -115,8 +121,9 @@ class ProcessScheduler(BatchSchedulerBase):
                         try:
                             evals.append(float(fut.result()))
                             params.append(par)
-                        except Exception:
-                            pass
+                        except Exception as e:
+                            # dropped -> tuner never observes it
+                            _log.debug("trial dropped (%s): %r", par, e)
                 except cf.TimeoutError:
                     for fut in futs:
                         fut.cancel()

@@ -39,6 +39,7 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.service.client import ServiceClient, ServiceDown, ServiceError
+from repro.service.wal import atomic_write_text
 
 # tags eligible for a seeded kill; indices stay small so every spec fires
 # within one phase's slice of the workload
@@ -213,8 +214,7 @@ def run(data_dir: str, kills: int = 5, seed: int = 0, studies: int = 3,
     svc_dir = os.path.join(data_dir, "service")
     oracle_dir = os.path.join(data_dir, "oracle")
     cfg_path = os.path.join(data_dir, "config.json")
-    with open(cfg_path, "w") as fh:
-        json.dump(cfg, fh)
+    atomic_write_text(cfg_path, json.dumps(cfg))
 
     def say(msg):
         if verbose:

@@ -47,9 +47,10 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Callable, Dict, List, Optional
 from urllib.parse import unquote, urlparse
 
+from repro.analysis.sanitizers import assert_holds
 from repro.service.client import ServiceError
 from repro.service.recovery import CONFIG, SNAPSHOT, WAL_FILE, recover
-from repro.service.wal import WriteAheadLog
+from repro.service.wal import WriteAheadLog, atomic_write_text
 
 REPLY_CACHE_CAP = 128   # retained req_id replies per study
 
@@ -132,8 +133,7 @@ class TuningService:
         os.makedirs(self.data_dir, exist_ok=True)
         cfg_path = os.path.join(self.data_dir, CONFIG)
         if config is not None and not os.path.exists(cfg_path):
-            with open(cfg_path, "w") as fh:
-                json.dump(config, fh, indent=1)
+            atomic_write_text(cfg_path, json.dumps(config, indent=1))
         if not os.path.exists(cfg_path):
             raise ServiceError(500, f"no {CONFIG} in {self.data_dir}; pass "
                                     "config= on first start")
@@ -220,6 +220,7 @@ class TuningService:
         replay to be exact.  Validation comes first: once a record is
         fsync'd it WILL be replayed on every restart, so nothing that
         can't apply may reach the log."""
+        assert_holds(self._lock)
         op = dict(op)
         self.bank.validate_op(op)
         op["seq"] = self.bank.next_op_seq()
@@ -387,6 +388,7 @@ class TuningService:
             return self._compact_locked()
 
     def _compact_locked(self) -> Dict[str, Any]:
+        assert_holds(self._lock)  # caller-must-hold: snapshot vs. commits
         self.crash.check("compact.before_snapshot")
         try:
             # the snapshot carries op_seq + side tables; the replace is

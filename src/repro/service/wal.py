@@ -126,3 +126,17 @@ class WriteAheadLog:
             self._fh.close()
         except OSError:
             pass
+
+
+def atomic_write_text(path, text: str) -> None:
+    """Durable, atomic file publish: write-tmp -> flush -> fsync ->
+    os.replace.  A crash at any byte leaves either the old file or the
+    new one, never a torn hybrid — the config/snapshot counterpart of the
+    WAL's own fsync'd append discipline (REPRO-W302)."""
+    p = str(path)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as fh:
+        fh.write(text)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, p)

@@ -17,6 +17,7 @@ the latest restorable state.
 from __future__ import annotations
 
 import json
+import os
 import threading
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
@@ -64,11 +65,16 @@ class Checkpointer:
             final = self.dir / f"step_{step:08d}.npz"
             with open(tmp, "wb") as f:
                 np.savez(f, **flat)
-            tmp.replace(final)  # atomic publish
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)  # atomic, durable publish
             meta = {"step": step, **(extra or {})}
             mtmp = self.dir / f".tmp_step_{step:08d}.json"
-            mtmp.write_text(json.dumps(meta))
-            mtmp.replace(self.dir / f"step_{step:08d}.json")
+            with open(mtmp, "w") as f:
+                f.write(json.dumps(meta))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mtmp, self.dir / f"step_{step:08d}.json")
             self._gc()
 
         if self.async_save:
