@@ -53,6 +53,7 @@ BASELINES = [
     ("kinv_f64_schur", "kinv_f32_schur"),
     ("refit_warm", "refit_cold"),
     ("studies_per_sec", "multi_study_loop"),
+    ("autotune_ask_gp", "autotune_ask_random"),
 ]
 
 

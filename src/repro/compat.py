@@ -9,12 +9,37 @@ The repo targets a range of JAX releases; two APIs moved underneath us:
 
 Everything here is resolved once at import time so the hot paths pay no
 per-call getattr cost.
+
+This module also pins ``JAX_PLATFORMS=cpu`` when no accelerator is visible
+(below, before jax is imported): on accelerator-less CI runners the TPU
+plugin otherwise probes the GCP metadata server at device discovery and can
+stall for minutes.  Entry points that may run on bare runners
+(``launch/dryrun.py``, ``benchmarks/autotune_sharding.py``) import
+``repro.compat`` before jax to get this guard; an explicit ``JAX_PLATFORMS``
+in the environment always wins.
 """
 from __future__ import annotations
 
+import os as _os
+
 from typing import Optional, Sequence, Tuple
 
-import jax
+
+def _pin_cpu_if_no_accelerator() -> None:
+    if "JAX_PLATFORMS" in _os.environ:
+        return  # explicit choice wins
+    tpu = (any(_os.path.exists(f"/dev/accel{i}") for i in range(4))
+           or _os.path.exists("/dev/vfio")
+           or _os.environ.get("TPU_NAME")
+           or _os.environ.get("TPU_WORKER_ID"))
+    gpu = _os.path.exists("/dev/nvidia0")
+    if not tpu and not gpu:
+        _os.environ["JAX_PLATFORMS"] = "cpu"
+
+
+_pin_cpu_if_no_accelerator()
+
+import jax  # noqa: E402  (the platform pin above must precede this)
 
 
 def _resolve_compiler_params_cls():

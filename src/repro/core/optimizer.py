@@ -147,6 +147,9 @@ def _to_jsonable(cfg: Dict[str, Any]) -> Dict[str, Any]:
             out[k] = float(v)
         elif isinstance(v, np.ndarray):
             out[k] = v.tolist()
+        elif isinstance(v, dict):
+            # conditional (Choice) params nest {"_choice": ..., child: ...}
+            out[k] = _to_jsonable(v)
         else:
             out[k] = v
     return out

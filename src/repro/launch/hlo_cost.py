@@ -385,6 +385,132 @@ def analyze_module(hlo: str, n_devices: int) -> Dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Analytic plan estimator (no compile).
+#
+# The HLO analyzer above needs a compiled module — minutes per (arch, plan)
+# cell.  ``estimate_plan`` prices a distribution plan for a registry cell in
+# microseconds from the same roofline model (hlo_analysis constants + the
+# ring wire formulas above), which is what makes sharding-plan search a
+# *cheap objective* for the tuner: thousands of plans per second, with the
+# compile-and-measure path kept as the validation step for the winners.
+# ---------------------------------------------------------------------------
+
+# extra forward passes paid to rematerialize activations in the backward
+_REMAT_FLOP_MULT = {"none": 1.0, "dots": 7.0 / 6.0, "full": 8.0 / 6.0}
+# HBM-traffic factor for activations (reads+writes per token*d_model*layer)
+_REMAT_ACT_TRAFFIC = {"none": 18.0, "dots": 12.0, "full": 8.0}
+# activations *stored* until the backward (drives the memory model)
+_REMAT_ACT_STORED = {"none": 8.0, "dots": 4.0, "full": 1.5}
+
+HBM_PER_CHIP_BYTES = 16e9  # TPU v5e
+
+
+def estimate_plan(cfg, shape, plan: Dict, n_devices: int = 256) -> Dict:
+    """Analytic roofline estimate of one training/serving step under a plan.
+
+    ``plan`` knobs (all optional):
+      tp (int, default 1)            tensor-parallel group size
+      zero ("zero1" | "zero3")       grad sync: one all-reduce per step vs
+                                     per-microbatch param regather + RS
+      remat ("none"|"dots"|"full")   recompute policy
+      micro (int, default 1)         gradient-accumulation microbatches
+      seq_parallel (bool)            AG+RS instead of AR on the TP axis
+      ep (bool)                      MoE expert parallelism (all-to-all)
+      capacity_factor (float)        MoE token capacity
+
+    Returns roofline terms plus ``t_step_s`` (the scalar objective),
+    ``hbm_gb`` and ``fits`` (the memory constraint) — deterministic,
+    microseconds per call, no compile.
+    """
+    from repro.launch import hlo_analysis
+
+    tp = max(int(plan.get("tp", 1)), 1)
+    zero = plan.get("zero", "zero1")
+    remat = plan.get("remat", "full")
+    micro = max(int(plan.get("micro", 1)), 1)
+    seq_parallel = bool(plan.get("seq_parallel", False))
+    ep = bool(plan.get("ep", False))
+    cf = float(plan.get("capacity_factor", 0.0)) or cfg.capacity_factor
+
+    if n_devices % tp:
+        return {"feasible": False, "reason": f"tp={tp} !| {n_devices}",
+                "t_step_s": float("inf"), "fits": False}
+    dp = n_devices // tp
+    train = shape.kind == "train"
+
+    P = float(cfg.param_count()["total"])
+    tokens = float(shape.global_batch) * (shape.seq_len if train or
+                                          shape.kind == "prefill" else 1)
+    tokens_chip = tokens / n_devices
+    d, L = float(cfg.d_model), float(cfg.n_layers)
+
+    # -- compute ------------------------------------------------------------
+    flops_chip = (hlo_analysis.model_flops(cfg, shape)
+                  * (_REMAT_FLOP_MULT[remat] if train else 1.0) / n_devices)
+
+    # -- HBM traffic per chip ----------------------------------------------
+    act_traffic = _REMAT_ACT_TRAFFIC[remat] if train else 6.0
+    bytes_act = 2.0 * tokens_chip * d * L * act_traffic
+    passes = (2.0 + 2.0 * (_REMAT_FLOP_MULT[remat] - 1.0)) if train else 1.0
+    bytes_weights = 2.0 * (P / tp) * passes * (micro if train else 1.0)
+    # optimizer update: fp32 m/v read+write + master-param update, sharded
+    # over dp either way (zero1 shards moments too — same traffic term)
+    bytes_opt = (P / (dp * tp)) * (4 * 4 + 4 * 2) if train else 0.0
+    hbm_bytes = bytes_act + bytes_weights + bytes_opt
+
+    # -- wire per chip ------------------------------------------------------
+    grad_bytes = 2.0 * P / tp
+    wire = 0.0
+    if train and dp > 1:
+        if zero == "zero3":
+            # per-microbatch bf16 param all-gather + grad reduce-scatter
+            wire += micro * (_wire("all-gather", grad_bytes, dp)
+                             + _wire("reduce-scatter", grad_bytes / dp, dp))
+        else:
+            wire += _wire("all-reduce", grad_bytes, dp)
+    if tp > 1:
+        # Megatron TP: 2 collectives per layer per pass over the sharded
+        # activations; seq-parallel swaps AR for AG+RS (~0.75x wire)
+        act_layer = 2.0 * (tokens / dp) * d
+        n_coll = 2.0 * (3.0 if train else 1.0)
+        wire += L * n_coll * _wire("all-reduce", act_layer, tp) * (
+            0.75 if seq_parallel else 1.0)
+    n_moe = sum(1 for s in cfg.period if s.ffn == "moe") * (
+        cfg.n_periods if cfg.n_experts else 0)
+    if ep and n_moe:
+        a2a = 2.0 * tokens_chip * d * max(cf, 1.0) * max(cfg.top_k, 1)
+        g = min(cfg.n_experts, n_devices)
+        wire += n_moe * 2.0 * _wire("all-to-all", a2a, g)
+
+    terms = hlo_analysis.roofline_terms(flops_chip, hbm_bytes, wire)
+    # compute and HBM overlap on the MXU/VMEM pipeline; collectives only
+    # partially hide behind compute — charge them serially (pessimistic)
+    t_step = max(terms["t_compute_s"], terms["t_memory_s"]) + terms[
+        "t_collective_s"]
+
+    # -- memory model -------------------------------------------------------
+    params_res = 2.0 * P / tp / (dp if (train and zero == "zero3") else 1.0)
+    opt_res = (12.0 * P / (dp * tp)) if train else 0.0
+    act_res = (2.0 * (tokens_chip / micro) * d * L
+               * _REMAT_ACT_STORED[remat]) if train else (
+        2.0 * tokens_chip * d * L * 0.5)
+    hbm_gb = (params_res + opt_res + act_res) / 1e9
+    return {
+        "feasible": True,
+        "t_step_s": t_step,
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "t_collective_s": terms["t_collective_s"],
+        "dominant": terms["dominant"],
+        "hbm_gb": hbm_gb,
+        "fits": hbm_gb * 1e9 <= HBM_PER_CHIP_BYTES,
+        "plan": {"tp": tp, "zero": zero, "remat": remat, "micro": micro,
+                 "seq_parallel": seq_parallel, "ep": ep,
+                 "capacity_factor": cf},
+    }
+
+
 def _cond_trip(cond_ops: List[OpRec], consts: Dict[str, int]) -> float:
     for o in cond_ops:
         if o.op == "compare" and "direction=LT" in o.line:

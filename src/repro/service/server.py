@@ -64,28 +64,50 @@ def space_from_spec(spec: Dict[str, Any]) -> Dict[str, Any]:
          "x":  {"uniform": [-1.0, 2.0]},        # [loc, scale]
          "n":  {"range": [16, 256, 16]},        # start, stop, step
          "act": {"choice": ["relu", "gelu"]},
+         "tile": {"int": [1, 16]},              # inclusive bounds
+         "bq":  {"logint": [32, 512]},
          "tag": {"const": "v1"}}
+
+    Conditional subspaces nest one level of the same grammar under
+    ``cond`` (core.spaces.Choice)::
+
+        {"plan": {"cond": {"dp":  {"zero": {"choice": ["z1", "z3"]}},
+                           "tp8": {"sp": {"choice": [0, 1]}}}}}
     """
     from scipy.stats import loguniform, uniform
-    out: Dict[str, Any] = {}
-    for name, s in spec.items():
+
+    from repro.core.spaces import Choice, Int, LogInt
+
+    def one(name: str, s: Any, nested: bool = False) -> Any:
         if not isinstance(s, dict) or len(s) != 1:
             raise ServiceError(400, f"bad spec for param {name!r}: {s!r}")
         kind, arg = next(iter(s.items()))
         if kind == "uniform":
-            out[name] = uniform(float(arg[0]), float(arg[1]))
-        elif kind == "loguniform":
-            out[name] = loguniform(float(arg[0]), float(arg[1]))
-        elif kind == "range":
-            out[name] = range(*[int(a) for a in arg])
-        elif kind == "choice":
-            out[name] = list(arg)
-        elif kind == "const":
-            out[name] = arg
-        else:
-            raise ServiceError(400, f"unknown spec kind {kind!r} "
-                                    f"for param {name!r}")
-    return out
+            return uniform(float(arg[0]), float(arg[1]))
+        if kind == "loguniform":
+            return loguniform(float(arg[0]), float(arg[1]))
+        if kind == "range":
+            return range(*[int(a) for a in arg])
+        if kind == "choice":
+            return list(arg)
+        if kind == "int":
+            return Int(int(arg[0]), int(arg[1]))
+        if kind == "logint":
+            return LogInt(int(arg[0]), int(arg[1]))
+        if kind == "const":
+            return arg
+        if kind == "cond" and not nested:
+            if not isinstance(arg, dict) or not arg:
+                raise ServiceError(
+                    400, f"cond spec for {name!r} wants a branch dict")
+            return Choice({
+                bname: {cn: one(f"{name}.{bname}.{cn}", cs, nested=True)
+                        for cn, cs in sub.items()}
+                for bname, sub in arg.items()})
+        raise ServiceError(400, f"unknown spec kind {kind!r} "
+                                f"for param {name!r}")
+
+    return {name: one(name, s) for name, s in spec.items()}
 
 
 class CrashPoints:

@@ -1,0 +1,337 @@
+"""Conditional / structured spaces (Choice, Int, LogInt, constraints):
+masked encode/decode round-trips, scalar-vs-columnar bitwise parity, and
+kill->resume replay of a conditional-space study through the sync, async,
+service (WAL), and StudyBank drivers."""
+import json
+
+import numpy as np
+import pytest
+from scipy.stats import uniform
+
+from repro.core import (AskTellOptimizer, AsyncTuner, StudyBank, Tuner,
+                        CHOICE_KEY, Choice, Int, LogInt, ParamSpace)
+from repro.core.spaces import IMPUTED
+from repro.scheduler.base import TaskHandle
+
+FAST = dict(mc_samples=500, fit_steps=10)
+
+CSPACE = {
+    "algo": Choice({
+        "sgd": {"momentum": uniform(0, 1)},
+        "adam": {"beta2": [0.99, 0.999], "eps_exp": Int(-9, -6)},
+    }),
+    "lr_exp": uniform(-4, 3),
+    "tile": LogInt(16, 512),
+}
+
+
+def cond_obj(p):
+    a = p["algo"]
+    base = -(p["lr_exp"] + 2.0) ** 2 - (np.log2(p["tile"]) - 7.0) ** 2
+    if a[CHOICE_KEY] == "sgd":
+        return float(base - (a["momentum"] - 0.9) ** 2)
+    return float(base - 100 * (a["beta2"] - 0.999) ** 2
+                 - 0.1 * (a["eps_exp"] + 8) ** 2)
+
+
+class InlineScheduler:
+    """Deterministic async scheduler (see test_optimizer)."""
+
+    def submit(self, fn, params):
+        h = TaskHandle(params)
+        try:
+            h.result = float(fn(params))
+        except Exception as e:  # noqa: BLE001
+            h.error = e
+        h.done.set()
+        return h
+
+    def wait_any(self, handles, timeout=None):
+        done = [h for h in handles if h.done.is_set()]
+        return done[:1]
+
+
+# --------------------------------------------------------------------- shape
+def test_int_logint_bounds_and_encoding():
+    ps = ParamSpace({"a": Int(3, 9), "b": LogInt(16, 512)})
+    rng = np.random.default_rng(0)
+    rows = ps.sample(500, rng)
+    assert all(3 <= r["a"] <= 9 for r in rows)
+    assert all(16 <= r["b"] <= 512 for r in rows)
+    E = ps.encode(rows)
+    assert E.shape == (500, 2)
+    assert E.min() >= 0.0 and E.max() <= 1.0
+    # log-scale encoding: 128 lands midway between 16 and 512 (x32 each way)
+    mid = ps.encode([{"a": 6, "b": 91}])   # sqrt(16*512) ~ 90.5
+    assert abs(mid[0, 1] - 0.5) < 0.01
+    # LogInt skews small: the median draw is far below the midpoint 264
+    assert np.median([r["b"] for r in rows]) < 150
+    with pytest.raises(ValueError):
+        Int(5, 4)
+    with pytest.raises(ValueError):
+        LogInt(0, 8)
+
+
+def test_choice_validation():
+    with pytest.raises(ValueError):
+        Choice({})
+    with pytest.raises(ValueError):
+        Choice({"a": {"x": [1]}, "b": {CHOICE_KEY: [1]}})
+    with pytest.raises(ValueError):
+        Choice({"a": {"inner": Choice({"b": {}})}})   # no nesting
+
+
+def test_choice_samples_carry_only_active_children():
+    ps = ParamSpace(CSPACE)
+    rows = ps.sample(200, np.random.default_rng(1))
+    for r in rows:
+        a = r["algo"]
+        if a[CHOICE_KEY] == "sgd":
+            assert set(a) == {CHOICE_KEY, "momentum"}
+            assert 0.0 <= a["momentum"] <= 1.0
+        else:
+            assert set(a) == {CHOICE_KEY, "beta2", "eps_exp"}
+            assert a["beta2"] in (0.99, 0.999)
+            assert -9 <= a["eps_exp"] <= -6
+        # JSON-clean: nested values are Python scalars
+        json.dumps(r)
+
+
+def test_masked_encoding_imputes_inactive_dims():
+    ps = ParamSpace(CSPACE)
+    rows = ps.sample(64, np.random.default_rng(2))
+    E = ps.encode(rows)
+    # layout: [sgd_oh, adam_oh | momentum | beta2, eps_exp | lr_exp | tile]
+    assert E.shape == (64, ps.dim) and ps.dim == 7
+    for i, r in enumerate(rows):
+        if r["algo"][CHOICE_KEY] == "sgd":
+            assert E[i, 0] == 1.0 and E[i, 1] == 0.0
+            assert E[i, 3] == IMPUTED and E[i, 4] == IMPUTED
+            assert E[i, 2] != IMPUTED or r["algo"]["momentum"] == IMPUTED
+        else:
+            assert E[i, 0] == 0.0 and E[i, 1] == 1.0
+            assert E[i, 2] == IMPUTED
+
+
+def test_encode_decode_round_trip():
+    ps = ParamSpace(CSPACE)
+    rows = ps.sample(128, np.random.default_rng(3))
+    dec = ps.decode(ps.encode(rows))
+    for r, d in zip(rows, dec):
+        assert d["algo"][CHOICE_KEY] == r["algo"][CHOICE_KEY]
+        if r["algo"][CHOICE_KEY] == "sgd":
+            assert abs(d["algo"]["momentum"] - r["algo"]["momentum"]) < 1e-9
+        else:
+            assert d["algo"]["beta2"] == r["algo"]["beta2"]
+            assert d["algo"]["eps_exp"] == r["algo"]["eps_exp"]
+        assert abs(d["lr_exp"] - r["lr_exp"]) < 1e-9
+        assert d["tile"] == r["tile"]
+
+
+def test_decode_inverts_flat_spaces_too():
+    ps = ParamSpace({"x": uniform(2, 6), "k": ["a", "b", "c"],
+                     "d": range(1, 10), "c": 42})
+    rows = ps.sample(50, np.random.default_rng(4))
+    dec = ps.decode(ps.encode(rows))
+    for r, d in zip(rows, dec):
+        assert abs(d["x"] - r["x"]) < 1e-9
+        assert d["k"] == r["k"] and d["d"] == r["d"] and d["c"] == 42
+
+
+def test_domain_size_sums_branch_products():
+    ps = ParamSpace({"a": Choice({"p": {"x": [1, 2, 3]},
+                                  "q": {"y": [4, 5], "z": range(2)}})})
+    assert ps.domain_size == 3 + 2 * 2
+    assert ParamSpace({"t": Int(1, 16)}).domain_size == 16
+
+
+# ----------------------------------------------------------------- parity
+def test_columnar_scalar_bitwise_parity_conditional():
+    """sample_columns consumes the identical RNG stream as sample and
+    yields bitwise-identical configs — the StudyBank contract, extended
+    to conditional spaces."""
+    ps = ParamSpace(CSPACE)
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    rows = ps.sample(256, r1)
+    cols = ps.sample_columns(256, r2)
+    assert r1.bit_generator.state == r2.bit_generator.state
+    for i, row in enumerate(rows):
+        assert row == ps.config_at(cols, i)
+    got = ps.configs_at(cols, np.arange(0, 256, 17))
+    assert got == [rows[i] for i in range(0, 256, 17)]
+    # encode_columns == encode on the same draws
+    np.testing.assert_array_equal(ps.encode_columns(cols, 256),
+                                  ps.encode(rows))
+
+
+def test_columnar_scalar_bitwise_parity_constrained():
+    ps = ParamSpace({"a": Int(1, 10), "b": Int(1, 10)},
+                    constraints=[lambda c: c["a"] + c["b"] <= 10])
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    rows = ps.sample(100, r1)
+    cols = ps.sample_columns(100, r2)
+    assert r1.bit_generator.state == r2.bit_generator.state
+    assert all(r["a"] + r["b"] <= 10 for r in rows)
+    for i, row in enumerate(rows):
+        assert row == ps.config_at(cols, i)
+
+
+def test_infeasible_constraints_raise():
+    ps = ParamSpace({"a": Int(1, 4)}, constraints=[lambda c: c["a"] > 99])
+    with pytest.raises(RuntimeError, match="feasible region"):
+        ps.sample(4, np.random.default_rng(0))
+
+
+def test_flat_spaces_bit_identical_with_and_without_extension_args():
+    flat = {"x": uniform(0, 1), "k": ["a", "b"], "n": range(4)}
+    a, b = ParamSpace(flat), ParamSpace(flat, constraints=None)
+    assert not a.is_conditional
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    assert a.sample(64, r1) == b.sample(64, r2)
+    assert r1.bit_generator.state == r2.bit_generator.state
+
+
+# ------------------------------------------------------- driver replay
+def test_sync_kill_resume_conditional(tmp_path):
+    conf = dict(optimizer="bayesian", num_iteration=6, batch_size=2,
+                seed=5, refit_every=4, **FAST)
+    objective = lambda b: ([cond_obj(p) for p in b], list(b))  # noqa: E731
+    full = Tuner(CSPACE, objective, conf).maximize()
+    assert any(p["algo"][CHOICE_KEY] == "adam" for p in full.params_tried)
+
+    ckpt = tmp_path / "sync.json"
+    conf_i = {**conf, "checkpoint_path": str(ckpt), "num_iteration": 3}
+    Tuner(CSPACE, objective, conf_i).maximize()
+    resumed = Tuner(CSPACE, objective,
+                    {**conf_i, "num_iteration": 6}).maximize()
+    assert resumed.params_tried == full.params_tried
+    assert resumed.objective_values == full.objective_values
+
+
+def test_async_kill_resume_conditional(tmp_path):
+    kw = dict(num_evals=10, batch_size=2, initial_random=2, seed=7, **FAST)
+    full = AsyncTuner(CSPACE, cond_obj, InlineScheduler(), **kw).maximize()
+
+    ckpt = tmp_path / "async.json"
+    stopped = AsyncTuner(CSPACE, cond_obj, InlineScheduler(),
+                         checkpoint_path=str(ckpt),
+                         early_stopping=lambda r: r.iterations >= 5,
+                         **kw).maximize()
+    assert stopped.iterations == 5
+    resumed = AsyncTuner(CSPACE, cond_obj, InlineScheduler(),
+                         checkpoint_path=str(ckpt), **kw).maximize()
+    assert resumed.params_tried == full.params_tried
+    assert resumed.objective_values == full.objective_values
+
+
+def test_state_dict_replays_conditional_params_bitwise():
+    """Nested Choice params survive the JSON checkpoint round trip and
+    re-encode to the exact GP inputs on load (the tell-replay contract)."""
+    opt = AskTellOptimizer(CSPACE, seed=3, **FAST)
+    for t in opt.ask(4):
+        opt.tell(t.id, cond_obj(t.params))
+    sd = json.loads(json.dumps(opt.state_dict()))
+    opt2 = AskTellOptimizer(CSPACE, seed=99, **FAST)
+    opt2.load_state_dict(sd)
+    assert opt2.state_dict() == sd
+    a = [(t.id, t.params) for t in opt.ask(3)]
+    b = [(t.id, t.params) for t in opt2.ask(3)]
+    assert a == b
+
+
+# ----------------------------------------------------------- StudyBank
+def test_bank_of_one_parity_conditional():
+    """A 1-study bank over a conditional space round-trips its study entry
+    through a stand-alone AskTellOptimizer (the v1 snapshot contract)."""
+    bank = StudyBank(CSPACE, 1, seed=5, mc_samples=32)
+    for _ in range(4):
+        (trials,) = bank.ask_all(1)
+        for t in trials:
+            bank.tell(0, t.id, cond_obj(t.params))
+    entry = bank.state_dict()["studies"][0]
+    solo = AskTellOptimizer(CSPACE, seed=0)
+    solo.load_state_dict(entry)
+    assert solo.state_dict() == entry
+    assert [dict(t.params) for t in solo.observed_trials()] == \
+        [dict(t.params) for t in bank.study(0).observed_trials()]
+
+
+def test_bank_kill_resume_conditional(tmp_path):
+    kw = dict(optimizer="bayesian", seed=11, mc_samples=32)
+
+    def drive(bank, steps):
+        hist = []
+        for _ in range(steps):
+            for b, ts in enumerate(bank.ask_all(1)):
+                for t in ts:
+                    hist.append((b, t.id, dict(t.params)))
+                    bank.tell(b, t.id, cond_obj(t.params))
+        return hist
+
+    ref = StudyBank(CSPACE, 4, **kw)
+    h_ref = drive(ref, 3) + drive(ref, 2)
+    a = StudyBank(CSPACE, 4, **kw)
+    drive(a, 3)
+    b = StudyBank(CSPACE, 4, **kw)
+    b.load_state_dict(json.loads(json.dumps(a.state_dict())))
+    h_resumed = drive(b, 2)
+    assert h_resumed == h_ref[len(h_ref) - len(h_resumed):]
+
+
+# ------------------------------------------------------------- service
+SVC_CFG = {"space": {
+    "algo": {"cond": {
+        "sgd": {"momentum": {"uniform": [0.0, 1.0]}},
+        "adam": {"beta2": {"choice": [0.99, 0.999]},
+                 "eps_exp": {"int": [-9, -6]}},
+    }},
+    "lr_exp": {"uniform": [-4.0, 3.0]},
+    "tile": {"logint": [16, 512]},
+}, "max_studies": 2, "optimizer": "bayesian", "seed": 0,
+    "mc_samples": 32, "fit_steps": 4}
+
+
+def _svc(tmp_path, name="svc"):
+    from repro.service.server import CrashPoints, TuningService
+    return TuningService(tmp_path / name, config=SVC_CFG,
+                         crash=CrashPoints(""))
+
+
+def test_service_space_spec_cond_kinds(tmp_path):
+    svc = _svc(tmp_path)
+    svc.create_study("a")
+    trials = svc.ask("a", 4, req_id="r0")["trials"]
+    for t in trials:
+        a = t["params"]["algo"]
+        assert a[CHOICE_KEY] in ("sgd", "adam")
+        assert 16 <= t["params"]["tile"] <= 512
+    svc.close()
+
+
+def test_service_wal_recovery_conditional_matches_oracle(tmp_path):
+    """Kill->restart recovery of a conditional-space study replays to the
+    oracle's exact state: same next proposals (nested params included),
+    same op_seq — the WAL journal carries Choice configs verbatim."""
+    from repro.service.server import CrashPoints, TuningService
+
+    def drive(svc):
+        svc.create_study("a")
+        for rnd in range(3):
+            trials = svc.ask("a", 2, req_id=f"r{rnd}")["trials"]
+            svc.tell("a", trials[0]["id"], cond_obj(trials[0]["params"]))
+            svc.tell_failed("a", trials[1]["id"])
+            if rnd == 1:
+                svc.compact()
+
+    svc = _svc(tmp_path, name="crashy")
+    drive(svc)
+    svc.close()   # "crash": recovery rebuilds from snapshot + WAL suffix
+    svc2 = TuningService(tmp_path / "crashy", crash=CrashPoints(""))
+    oracle = _svc(tmp_path, name="oracle")
+    drive(oracle)
+    a = svc2.ask("a", 4, req_id="final")
+    b = oracle.ask("a", 4, req_id="final")
+    assert a["trials"] == b["trials"]
+    assert svc2.bank.op_seq == oracle.bank.op_seq
+    svc2.close()
+    oracle.close()

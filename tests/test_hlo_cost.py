@@ -43,3 +43,77 @@ def test_scan_flops_counted_with_trip_multiplier():
     expected = 5 * 2 * 512 * 2048 * 512
     assert abs(res["flops"] - expected) / expected < 0.05
     assert res["ag"] >= 5  # the FSDP-style gather runs every iteration
+
+
+# ---- estimate_plan: the analytic roofline behind the autotune scenario ----
+# In-process (no subprocess): the estimator never touches jax/XLA, which is
+# the whole point — microseconds per call so it can serve as a constraint
+# predicate and CI objective.
+
+def _plan_env():
+    from repro.configs import get_config, get_shape
+    return get_config("yi-34b"), get_shape("train_4k")
+
+
+def test_estimate_plan_returns_finite_roofline():
+    from repro.launch.hlo_cost import estimate_plan
+    cfg, shape = _plan_env()
+    est = estimate_plan(cfg, shape, {"tp": 4, "zero": "zero3",
+                                     "remat": "dots", "micro": 2}, 256)
+    assert est["feasible"] and est["t_step_s"] > 0
+    assert est["t_step_s"] >= max(est["t_compute_s"], est["t_memory_s"])
+    assert est["dominant"] in ("t_compute_s", "t_memory_s")
+    assert est["hbm_gb"] > 0
+
+
+def test_estimate_plan_tp_must_divide_devices():
+    from repro.launch.hlo_cost import estimate_plan
+    cfg, shape = _plan_env()
+    est = estimate_plan(cfg, shape, {"tp": 7}, 256)
+    assert not est["feasible"] and est["t_step_s"] == float("inf")
+    assert not est["fits"]
+
+
+def test_estimate_plan_remat_trades_flops_for_hbm():
+    from repro.launch.hlo_cost import estimate_plan
+    cfg, shape = _plan_env()
+    plans = {r: estimate_plan(cfg, shape, {"tp": 8, "remat": r}, 256)
+             for r in ("none", "dots", "full")}
+    # more recompute -> more flops, less stored activation memory
+    assert plans["none"]["t_compute_s"] < plans["dots"]["t_compute_s"] \
+        < plans["full"]["t_compute_s"]
+    assert plans["none"]["hbm_gb"] > plans["dots"]["hbm_gb"] \
+        > plans["full"]["hbm_gb"]
+
+
+def test_estimate_plan_zero3_shards_params_for_wire_time():
+    from repro.launch.hlo_cost import estimate_plan
+    cfg, shape = _plan_env()
+    z1 = estimate_plan(cfg, shape, {"zero": "zero1", "micro": 4}, 256)
+    z3 = estimate_plan(cfg, shape, {"zero": "zero3", "micro": 4}, 256)
+    # zero3 regathers params per microbatch (more wire) but shards the
+    # resident optimizer+param state (less HBM)
+    assert z3["t_collective_s"] > z1["t_collective_s"]
+    assert z3["hbm_gb"] < z1["hbm_gb"]
+
+
+def test_estimate_plan_ep_costs_wire_only_on_moe():
+    from repro.configs import get_config, get_shape
+    from repro.launch.hlo_cost import estimate_plan
+    moe, shape = get_config("qwen2-moe-a2.7b"), get_shape("train_4k")
+    base = estimate_plan(moe, shape, {"tp": 1}, 256)
+    ep = estimate_plan(moe, shape, {"tp": 1, "ep": True}, 256)
+    assert ep["t_collective_s"] > base["t_collective_s"]  # all-to-all
+    dense = get_config("yi-34b")
+    d0 = estimate_plan(dense, shape, {"tp": 1}, 256)
+    d1 = estimate_plan(dense, shape, {"tp": 1, "ep": True}, 256)
+    assert d1["t_collective_s"] == d0["t_collective_s"]  # no experts
+
+
+def test_estimate_plan_deterministic():
+    from repro.launch.hlo_cost import estimate_plan
+    cfg, shape = _plan_env()
+    plan = {"tp": 4, "zero": "zero3", "remat": "full",
+            "micro": 8, "seq_parallel": True}
+    assert estimate_plan(cfg, shape, plan, 256) == \
+        estimate_plan(cfg, shape, plan, 256)
