@@ -52,6 +52,7 @@ BASELINES = [
     ("tpe_pallas", "tpe_host"),
     ("kinv_f64_schur", "kinv_f32_schur"),
     ("refit_warm", "refit_cold"),
+    ("single_study_asks", "single_study_random"),
     ("studies_per_sec", "multi_study_loop"),
     ("autotune_ask_gp", "autotune_ask_random"),
 ]

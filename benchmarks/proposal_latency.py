@@ -48,6 +48,28 @@ ISSUE-5 section (the conditioning-hardened shared scoring core):
     accumulation when x64 is enabled, one iterative-refinement step on
     float32-only backends).  Acceptance: hardened <10% over f32 at n=1024.
 
+ISSUE-10 sections (bank-of-one: every single-study strategy now serves
+asks through the bucketed ``StudyBank`` pipeline):
+
+  * ``single_study_ask_{gp,tpe,clustering}``: one steady-state
+    ``AskTellOptimizer.ask`` per strategy — the whole serving path the
+    refactor unified (columnar candidate draw -> bucketed gather ->
+    staged vmap'd device program -> one exit sync).  ``single_study_asks``
+    is the mean of the three; it is the CI-gated row
+    (``single_study_asks:1.25``), normalized by ``bench_delta`` against
+    the same-run ``single_study_random`` row (a random-strategy ask —
+    pure host work, so runner throttling moves both and the gate blocks
+    only on the bank serving overhead itself regressing).
+  * ``time_to_1000_asks``: measured ask+tell_failed rounds on the
+    bank-of-one GP path, extrapolated to 1000 asks — the steady-state
+    serving headline.
+  * ``single_study_retrace``: the single-study zero-retrace proof.  Each
+    of GP / TPE / clustering grows 64 -> 1024 observations through
+    ``AskTellOptimizer``; every bank entry point (``gp.BANK_JITS`` +
+    ``fused_tpe_propose_bank``) may compile once per power-of-2 bucket it
+    is dispatched at, and the row's value is the summed excess jit-cache
+    growth (nonzero exits 1 — the CI bench job fails).
+
 All paired rows are timed with *interleaved* reps (``_interleaved_medians``)
 so this container's bursty CPU-share throttling hits every path equally;
 ``bench_delta.py`` additionally normalizes derived rows against the same
@@ -60,6 +82,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
@@ -435,6 +458,164 @@ def run_tpe(n_cand_grid=(2048, 8192), n_obs_grid=(64, 256), bs=4, dim=4,
     return out
 
 
+def _ask_space():
+    from scipy import stats
+    return {"x": stats.uniform(0, 1), "y": stats.uniform(-1, 2),
+            "z": stats.uniform(0, 3)}
+
+
+def _grow(opt, k, rng):
+    for _ in range(k):
+        p = {"x": float(rng.uniform(0, 1)), "y": float(rng.uniform(-1, 1)),
+             "z": float(rng.uniform(0, 3))}
+        opt.observe_params(p, float(rng.normal()))
+
+
+def run_bank_of_one(n_obs=256, n_mc=64, reps=5, seed=0):
+    """ISSUE-10 rows: the unified single-study serving path.
+
+    Every bank-served strategy is timed on one steady-state
+    ``AskTellOptimizer.ask`` (each rep's proposal is told *failed* in the
+    untimed setup slot, so observation counts and every bucket shape stay
+    frozen).  ``single_study_random`` — a random-strategy ask, pure host
+    candidate draw with no device program — is the same-run normalization
+    denominator for the gated ``single_study_asks`` mean:
+    ``bench_delta`` compares the *ratio*, so shared-runner throttling
+    (which moves host work and dispatch overhead together) stays
+    advisory and the gate blocks only on the bank serving overhead
+    itself regressing >25%.
+    """
+    from repro.core import AskTellOptimizer
+
+    rng = np.random.default_rng(seed)
+    names = [("random", "random"), ("gp", "bayesian"), ("tpe", "tpe"),
+             ("clustering", "clustering")]
+    opts, asked = {}, {}
+    for label, strat in names:
+        o = AskTellOptimizer(_ask_space(), optimizer=strat,
+                             seed=seed + 1, mc_samples=n_mc)
+        _grow(o, n_obs, rng)
+        opts[label], asked[label] = o, []
+
+    def setup(label):
+        for t in asked[label]:
+            opts[label].tell_failed(t.id)
+        asked[label].clear()
+
+    def call(label):
+        asked[label].append(opts[label].ask(1)[0])
+
+    import functools
+    labels = [lb for lb, _ in names]
+    meds = _interleaved_medians(
+        [functools.partial(call, lb) for lb in labels], reps=reps,
+        setups=[functools.partial(setup, lb) for lb in labels])
+    t_rand = meds[0]
+    _emit("single_study_random", t_rand * 1e6,
+          f"baseline=1.0x,n_obs={n_obs}")
+    for lb, t in zip(labels[1:], meds[1:]):
+        _emit(f"single_study_ask_{lb}", t * 1e6,
+              f"n_obs={n_obs},vs_random={t / max(t_rand, 1e-12):.1f}x")
+    t_mean = float(np.mean(meds[1:]))
+    _emit("single_study_asks", t_mean * 1e6,
+          f"mean_of=gp/tpe/clustering,n_obs={n_obs},"
+          f"vs_random={t_mean / max(t_rand, 1e-12):.1f}x")
+
+    # time_to_1000_asks: real ask+tell_failed rounds (the tell is part of
+    # what a serving loop pays), extrapolated from a measured burst
+    gp_opt = opts["gp"]
+    setup("gp")
+    rounds = 20
+    t = gp_opt.ask(1)[0]                # untimed settle round
+    gp_opt.tell_failed(t.id)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        t = gp_opt.ask(1)[0]
+        gp_opt.tell_failed(t.id)
+    per_round = (time.perf_counter() - t0) / rounds
+    _emit("time_to_1000_asks", per_round * 1000.0 * 1e6,
+          f"per_round={per_round * 1e6:.0f}us,rounds_measured={rounds},"
+          f"strategy=bayesian,n_obs={n_obs}")
+    return t_mean
+
+
+def run_single_study_retrace(max_obs=1024, n_mc=64, seed=0):
+    """The single-study zero-retrace proof, one strategy at a time.
+
+    The multi-study growth sweep (``multi_study.run_retrace_sweep``)
+    pins the bucket schedule for ``ask_all``; this one pins the
+    bank-of-one path those same programs now serve: three
+    ``AskTellOptimizer`` instances (GP, clustering, TPE) each grow
+    64 -> ``max_obs`` observations, asking twice at every bucket edge
+    (edge-1 / edge / edge+1) and at interior points.  Each audited entry
+    point — ``gp.BANK_JITS`` plus the TPE bank program — may compile
+    once per power-of-2 bucket it is dispatched at; GP and clustering
+    share the obs-stage programs (identical shapes -> cache hits for the
+    second family), clustering adds only its pick head, TPE only its one
+    fused program.  Emits the summed excess as ``single_study_retrace``
+    and returns it (``main`` exits 1 when nonzero).
+    """
+    from repro.analysis.sanitizers import no_retrace
+    from repro.core import AskTellOptimizer
+    from repro.core import gp as gp_lib
+    from repro.core import tpe as tpe_lib
+    from repro.core.studybank import _pow2
+
+    jits = dict(gp_lib.BANK_JITS)
+    jits["fused_tpe_propose_bank"] = tpe_lib.fused_tpe_propose_bank
+
+    rng = np.random.default_rng(seed)
+    opts = {lb: AskTellOptimizer(_ask_space(), optimizer=strat,
+                                 seed=seed + 1, mc_samples=n_mc)
+            for lb, strat in [("gp", "bayesian"),
+                              ("clustering", "clustering"),
+                              ("tpe", "tpe")]}
+
+    # same bucket-edge targets as the multi-study sweep: for each edge E
+    # (na doubles at n_obs = E), visit E-1, E, E+1, plus mid-bucket
+    pend_cap, n = 4, 1
+    targets, na = [], 64
+    while na <= max_obs:
+        edge = na - pend_cap - n
+        targets += [edge - 1, edge, edge + 1, edge + (edge // 2)]
+        na *= 2
+    targets = sorted(t for t in set(targets) if 58 <= t <= max_obs - 5)
+
+    buckets, fit_buckets = set(), set()
+    with no_retrace(jits=jits, raise_on_violation=False) as rep:
+        for lb, opt in opts.items():
+            for k in targets:
+                _grow(opt, k - opt.n_observed, rng)
+                na = _pow2(max(16, k + pend_cap + n))
+                buckets.add(na)
+                if lb != "tpe":
+                    led = opt._led
+                    if (led.have_fit[0] == 0
+                            or k - int(led.n_fit[0]) >= opt.refit_every):
+                        fit_buckets.add(na)
+                # two asks per target: the first may compile (bucket
+                # boundary), the second must be a pure cache hit
+                for _ in range(2):
+                    t = opt.ask(1)[0]
+                    opt.tell_failed(t.id)
+        nb = len(buckets)
+        # one compile per bucket a program is dispatched at; prescale_C
+        # depends only on mc_samples; absorb never runs (every trial is
+        # told failed before the next ask)
+        rep.expected = {
+            "bank_factors": nb, "bank_prescale_X": nb,
+            "bank_prescale_C": 1, "bank_absorb": 0, "bank_dist": nb,
+            "bank_exp": nb, "bank_pick": nb, "bank_cluster_pick": nb,
+            "fit_hypers_bank": len(fit_buckets),
+            "fused_tpe_propose_bank": nb,
+        }
+    retraces = rep.violations
+    detail = rep.detail() or "all=expected"
+    _emit("single_study_retrace", float(retraces),
+          f"retraces={retraces},boundaries={nb},strategies=3,{detail}")
+    return retraces
+
+
 def run(batch_sizes=(1, 4, 16), n_obs_grid=(16, 64, 256, 512),
         n_cand=2000, dim=4, fit_steps=40, reps=3, seed=0):
     from repro.core.strategies import (FusedHallucinationStrategy,
@@ -519,6 +700,8 @@ def main():
         kinv_rows = run_kinv_hardening(n_grid=(256,), reps=args.reps)
         tpe_rows = run_tpe(n_cand_grid=(2048,), n_obs_grid=(64, 256),
                            reps=args.reps)
+        run_bank_of_one(reps=args.reps)
+        retraces = run_single_study_retrace(max_obs=256)
     else:
         rows = run(reps=args.reps)
         run_pallas_pending(reps=args.reps)
@@ -526,6 +709,8 @@ def main():
         run_clustering(reps=args.reps)
         kinv_rows = run_kinv_hardening(reps=args.reps)
         tpe_rows = run_tpe(reps=args.reps)
+        run_bank_of_one(reps=args.reps)
+        retraces = run_single_study_retrace(max_obs=1024)
     target = [r for r in rows if r[0] == 4 and r[1] == 256]
     if target:
         bs, n, t_ref, t_fused, speedup = target[0]
@@ -542,11 +727,16 @@ def main():
         print(f"# CLAIM issue5 'conditioning hardening <10% over the f32 "
               f"Schur rescore path at n=1024': {kinv_target[0]:+.1f}% -> "
               f"{'PASS' if kinv_target[0] < 10.0 else 'FAIL'}")
+    print(f"# CLAIM issue10 'zero steady-state retraces across "
+          f"single-study growth (gp/tpe/clustering)': {retraces} -> "
+          f"{'PASS' if retraces == 0 else 'FAIL'}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"benchmark": "proposal_latency", "rows": ROWS}, f,
                       indent=2)
         print(f"# wrote {len(ROWS)} rows to {args.json}")
+    if retraces:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

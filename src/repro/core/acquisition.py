@@ -112,35 +112,8 @@ def fused_cluster_propose(X: jax.Array, y: jax.Array, mask: jax.Array,
     return picks
 
 
-@functools.partial(jax.jit, static_argnames=("batch_size", "n_top",
-                                             "pend_cap", "use_pallas",
-                                             "block_s", "interpret"))
-def fused_cluster_propose_bank(X: jax.Array, y: jax.Array, mask: jax.Array,
-                               P: jax.Array, n_pending: jax.Array,
-                               C: jax.Array, ls, var, noise,
-                               n_obs: jax.Array, domain_size: jax.Array,
-                               keys: jax.Array, batch_size: int,
-                               n_top: int, pend_cap: int,
-                               use_pallas: bool = False,
-                               block_s: int = 256,
-                               interpret: bool = True):
-    """``fused_cluster_propose`` vmapped over a leading study axis (the
-    StudyBank ask path): inputs carry a study dimension B with masked
-    ranks, hypers and the k-means PRNG key are per-study, and the Cholesky
-    factors are recomputed in-program from the masked kernel so a resumed
-    bank replays bit-identically from ledger state alone.  Returns
-    ``(picks (B, batch_size), L, Linv)``."""
-    from repro.core import gp as gp_lib
-    from repro.core import scoring
-
-    def one(X, y, mask, P, n_pending, C, ls, var, noise, n_obs, key):
-        L = gp_lib.cholesky_masked(X, mask, ls, var, noise)
-        Linv = scoring.linv_from_chol(L)
-        picks = fused_cluster_propose(
-            X, y, mask, L, Linv, P, n_pending, C, ls, var, noise, n_obs,
-            domain_size, key, batch_size, n_top, pend_cap,
-            use_pallas=use_pallas, block_s=block_s, interpret=interpret)
-        return picks, L, Linv
-
-    return jax.vmap(one)(X, y, mask, P, n_pending, C, ls, var, noise,
-                         n_obs, keys)
+# NOTE: the monolithic ``fused_cluster_propose_bank`` (which refactored the
+# factors in-program per ask) is gone — clustering fleets now ride the
+# bank's STAGED pipeline (``gp.bank_factors``/``bank_dist``/``bank_exp``
+# feeding ``gp.bank_cluster_pick``), sharing the obs-stamp cache with the
+# GP-BUCB rows instead of recomputing every study's Cholesky every ask.

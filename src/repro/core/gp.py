@@ -429,13 +429,17 @@ def fused_propose_pallas_pending(X: jax.Array, y: jax.Array,
 @jax.jit
 def bank_factors(X: jax.Array, mask: jax.Array, ls, var, noise):
     """Masked-kernel Cholesky factors for every study: (B, na, d) ->
-    ``(L, Linv)`` at (B, na, na).  Deterministic from ledger state alone —
-    what makes a resumed bank replay bit-identical — and written back so
-    the fleet checkpoint carries ``L``/``L⁻¹``."""
+    ``(L, Linv, cond)`` at (B, na, na) / (B,).  Deterministic from ledger
+    state alone — what makes a resumed bank replay bit-identical — and
+    written back so the fleet checkpoint carries ``L``/``L⁻¹``.  ``cond``
+    is the power-iteration estimate of cond₂(K) (``scoring.cond_estimate``)
+    riding along with the factorization so ``last_cond_proxy`` lands within
+    ~2x of the true condition number instead of the 20-50x-low diagonal
+    bound."""
 
     def one(X, mask, ls, var, noise):
         L = cholesky_masked(X, mask, ls, var, noise)
-        return L, scoring.linv_from_chol(L)
+        return L, scoring.linv_from_chol(L), scoring.cond_estimate(L, mask)
 
     return jax.vmap(one)(X, mask, ls, var, noise)
 
@@ -545,34 +549,83 @@ def bank_pick(d2: jax.Array, s: jax.Array, e: jax.Array, Cs: jax.Array,
                          n_obs_eff)
 
 
+@functools.partial(jax.jit, static_argnames=("batch_size", "n_top", "S"))
+def bank_cluster_pick(d2: jax.Array, s: jax.Array, e: jax.Array,
+                      C: jax.Array, y: jax.Array, mask: jax.Array,
+                      Linv: jax.Array, var, noise, n_obs_eff: jax.Array,
+                      domain_size: jax.Array, keys: jax.Array,
+                      batch_size: int, n_top: int, S: int):
+    """The clustering head on the staged bank pipeline: assemble the masked
+    Matern block from the shared ``bank_dist``/``bank_exp`` pieces, score
+    every candidate through the hardened sum-of-squares form, then UCB ->
+    ``top_k`` -> weighted k-means over the RAW candidate rows -> one
+    exploitative pick per cluster — op-for-op the tail of
+    ``acquisition.fused_cluster_propose``, vmap'd over the bank.  ``C`` is
+    the *unscaled* candidate block (k-means clusters in raw space);
+    ``keys`` carries each study's per-ask PRNG key.  Returns picked
+    candidate indices (B, batch_size)."""
+    from repro.core.kmeans import _kmeans
+
+    def one(d2, s, e, C, y, mask, Linv, var, noise, n_obs_eff, key):
+        K = var * (1.0 + s + (5.0 / 3.0) * d2) * e * mask[None, :]
+        alpha = scoring.kinv_matvec(Linv, y * mask)
+        mu = K @ alpha
+        t = K @ Linv.T
+        q = jnp.sum(t * t, axis=-1)
+        sig2 = jnp.maximum(var + noise - q, 1e-10)
+        beta = adaptive_beta_dev(n_obs_eff, domain_size)
+        acq = mu + jnp.sqrt(beta) * jnp.sqrt(sig2)
+        acq = jnp.where(jnp.arange(C.shape[0]) < S, acq, -jnp.inf)
+        top_vals, top_idx = jax.lax.top_k(acq, n_top)
+        w = top_vals - top_vals[n_top - 1] + 1e-6
+        assign = _kmeans(C[top_idx], w, key, batch_size)
+
+        def body(c, carry):
+            picked, picks = carry
+            in_c = (assign == c) & ~picked
+            sel = jnp.where(jnp.any(in_c), in_c, ~picked)
+            vals = jnp.where(sel, top_vals, -jnp.inf)
+            j = jnp.argmax(vals).astype(jnp.int32)
+            return picked.at[j].set(True), picks.at[c].set(top_idx[j])
+
+        _, picks = jax.lax.fori_loop(
+            0, batch_size, body,
+            (jnp.zeros((n_top,), bool),
+             jnp.zeros((batch_size,), jnp.int32)))
+        return picks
+
+    return jax.vmap(one)(d2, s, e, C, y, mask, Linv, var, noise,
+                         n_obs_eff, keys)
+
+
 @functools.partial(jax.jit, static_argnames=("steps",))
 def fit_hypers_bank(X: jax.Array, y: jax.Array, mask: jax.Array,
                     log_ls: jax.Array, log_var: jax.Array,
-                    log_noise: jax.Array, steps: int = 40):
+                    log_noise: jax.Array, y_mean: jax.Array,
+                    y_std: jax.Array, steps: int = 40):
     """``fit_hypers`` for every study in a bank, one dispatch.
 
-    ``y`` is raw signed values at the bucket shape; standardization is
-    masked (mean/std over the ``mask``-active rows) and the frozen
-    ``(y_mean, y_std)`` pair is returned with the fitted log-hypers so the
-    ledger can standardize later observations exactly as the single-study
-    GP does between refits.  Warm-starts from the passed per-study
+    ``y`` is raw signed values at the bucket shape; the frozen
+    ``(y_mean, y_std)`` standardization scalars are computed on the HOST
+    (``studybank._y_standardization``) with the exact numpy op sequence of
+    the single-study ``GaussianProcess.fit``, and passed in — z is then a
+    pure elementwise transform, bit-identical to the host standardization,
+    which is what makes the bank-of-one ask path reproduce the pre-refactor
+    single-study fits exactly.  Warm-starts from the passed per-study
     log-hypers — ledger rows that never fit carry the cold-init values, so
     one fixed-``steps`` program serves cold and warm fits alike (a static
     warm/cold split would double the cache entries per bucket).
     """
 
-    def one(X, y, mask, lls, lv, ln):
-        n_eff = jnp.maximum(mask.sum(), 1.0)
-        mean = jnp.sum(y * mask) / n_eff
-        std = jnp.sqrt(jnp.sum(((y - mean) ** 2) * mask) / n_eff) + 1e-6
+    def one(X, y, mask, lls, lv, ln, mean, std):
         z = ((y - mean) / std) * mask
         _, _, _, params = fit_hypers(
             X, z, mask, steps=steps,
             init={"log_ls": lls, "log_var": lv, "log_noise": ln})
-        return (params["log_ls"], params["log_var"], params["log_noise"],
-                mean, std)
+        return params["log_ls"], params["log_var"], params["log_noise"]
 
-    return jax.vmap(one)(X, y, mask, log_ls, log_var, log_noise)
+    return jax.vmap(one)(X, y, mask, log_ls, log_var, log_noise, y_mean,
+                         y_std)
 
 
 # Every jitted bank entry point, by name: the retrace benchmark
@@ -587,6 +640,7 @@ BANK_JITS = {
     "bank_dist": bank_dist,
     "bank_exp": bank_exp,
     "bank_pick": bank_pick,
+    "bank_cluster_pick": bank_cluster_pick,
     "fit_hypers_bank": fit_hypers_bank,
 }
 

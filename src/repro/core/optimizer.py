@@ -49,11 +49,17 @@ import numpy as np
 from repro.core.spaces import ParamSpace
 from repro.core.strategies import STRATEGIES
 from repro.core.studybank import (S_FAILED, S_OBSERVED, S_PENDING,
-                                  StudyLedger, rng_from_state)
+                                  StudyLedger, _y_standardization,
+                                  rng_from_state)
 
 PENDING = "pending"
 OBSERVED = "observed"
 FAILED = "failed"
+
+# strategies whose asks are served by the bucketed StudyBank pipeline
+# (bank-of-one for stand-alone optimizers).  The legacy reference
+# strategies (hallucination_ref) and random keep their own propose paths.
+_BANKABLE = {"bayesian", "hallucination", "tpe", "clustering"}
 
 _STATUS_CODE = {PENDING: S_PENDING, OBSERVED: S_OBSERVED, FAILED: S_FAILED}
 _STATUS_NAME = {v: k for k, v in _STATUS_CODE.items()}
@@ -200,6 +206,9 @@ class AskTellOptimizer:
         self._best_trace: List[float] = []    # raw best-so-far snapshots
         self._strat = None
         self._gp_snapshot = None   # pending restore from load_state_dict
+        # the bank engine serving this view's asks: the owning StudyBank
+        # (set by its constructor) or a lazily-built bank of one
+        self._bank = None
 
     # ---- ledger-backed counters (the view's scalars ARE the array row) ----
     @property
@@ -274,15 +283,29 @@ class AskTellOptimizer:
                               pallas_interpret=self.pallas_interpret,
                               refit_every=self.refit_every,
                               **self.strategy_kwargs)
-            gp = getattr(self._strat, "gp", None)
-            if gp is not None and self._gp_snapshot is not None:
-                obs = self.observed_trials()
-                if obs:
-                    gp.restore_exact(
-                        self.space.encode([t.params for t in obs]),
-                        self._signed_y(obs), self._gp_snapshot)
-            self._gp_snapshot = None
+            if self.optimizer not in _BANKABLE:
+                # legacy strategies replay their GP from the snapshot; the
+                # bank-served paths restored theirs into the ledger at
+                # load_state_dict time (the strategy GP stays untouched)
+                gp = getattr(self._strat, "gp", None)
+                if gp is not None and self._gp_snapshot is not None:
+                    obs = self.observed_trials()
+                    if obs:
+                        gp.restore_exact(
+                            self.space.encode([t.params for t in obs]),
+                            self._signed_y(obs), self._gp_snapshot)
+                self._gp_snapshot = None
         return self._strat
+
+    def _engine(self):
+        """The StudyBank serving this view's asks — the owning bank when
+        this view is a fleet member, else a lazily-built bank of one over
+        the private ledger (same bucketed pipeline, same compiled
+        programs)."""
+        if self._bank is None:
+            from repro.core.studybank import StudyBank
+            self._bank = StudyBank._wrap_view(self)
+        return self._bank
 
     def _signed_y(self, obs: List[Trial]) -> np.ndarray:
         return np.asarray([self.sign * t.value for t in obs],
@@ -306,6 +329,17 @@ class AskTellOptimizer:
             # not enough observations to model: explore at random (the
             # drivers' initial_random phase lands here too)
             chosen = self.space.sample(n, self._rng)
+        elif self.optimizer in _BANKABLE:
+            # bank-of-one: the bucketed StudyBank pipeline serves the ask
+            # (zero retraces across observation growth).  Candidates come
+            # from this view's own RNG via the columnar sampler, which
+            # consumes the exact byte stream ``sample`` would — proposals
+            # are bit-identical to the retired per-strategy fused path.
+            n_mc = self.mc_samples or self.space.mc_samples(n)
+            cols = self.space.sample_columns(n_mc, self._rng)
+            cfgs, enc = self._engine().ask_view(self, n, cols, n_mc)
+            self._ask_count += 1
+            return self._register_asked(list(cfgs), enc)
         else:
             n_mc = self.mc_samples or self.space.mc_samples(n)
             cands = self.space.sample(n_mc, self._rng)
@@ -463,11 +497,32 @@ class AskTellOptimizer:
         )
 
     # --------------------------------------------------------- state dict
+    def _gp_export(self) -> Optional[Dict[str, Any]]:
+        """Fit-schedule snapshot for the state dict's ``"gp"`` key, in the
+        v1 ``GaussianProcess.export_state`` format: the live strategy GP
+        when it has one (legacy propose paths), else the ledger row's bank
+        fit schedule (the bank-served paths), else whatever snapshot a
+        load handed us that hasn't been consumed yet."""
+        gp = getattr(self._strat, "gp", None) if self._strat else None
+        snap = gp.export_state() if gp is not None else None
+        if snap is not None:
+            return snap
+        led, b = self._led, self._b
+        if int(led.have_fit[b]):
+            return {
+                "n_fit": int(led.n_fit[b]),
+                "log_params": {
+                    "log_ls": np.asarray(led.log_ls[b],
+                                         np.float32).tolist(),
+                    "log_var": np.float32(led.log_var[b]).tolist(),
+                    "log_noise": np.float32(led.log_noise[b]).tolist(),
+                }}
+        return self._gp_snapshot
+
     def state_dict(self) -> Dict[str, Any]:
         """Full JSON-able snapshot: ledger (pending trials included, so a
         driver can re-dispatch them on resume), RNG stream, counters, and
         the GP fit schedule."""
-        gp = getattr(self._strat, "gp", None) if self._strat else None
         return {
             "version": 1,
             "next_id": self._next_id,
@@ -480,7 +535,7 @@ class AskTellOptimizer:
                         "obs_seq": t.obs_seq}
                        for t in self._trials.values()],
             "rng_state": self._rng.bit_generator.state,
-            "gp": gp.export_state() if gp is not None else None,
+            "gp": self._gp_export(),
         }
 
     def load_state_dict(self, sd: Dict[str, Any]) -> None:
@@ -511,6 +566,25 @@ class AskTellOptimizer:
         self._rng = rng_from_state(sd["rng_state"])
         self._gp_snapshot = sd.get("gp")
         self._strat = None   # rebuilt (with GP replay) on the next ask
+        snap = self._gp_snapshot
+        if snap and self.optimizer in _BANKABLE:
+            # bank-served paths keep their fit schedule in the ledger:
+            # restore the log-hypers and the frozen standardization over
+            # the first n_fit observations (the exact scalars the
+            # uninterrupted run froze at its last refit), so the resumed
+            # bank replays bit-identical proposals
+            obs = self.observed_trials()
+            if obs:
+                lp = snap["log_params"]
+                led.log_ls[b] = np.asarray(lp["log_ls"], np.float32)
+                led.log_var[b] = np.float32(lp["log_var"])
+                led.log_noise[b] = np.float32(lp["log_noise"])
+                n_fit = max(1, min(int(snap["n_fit"]), len(obs)))
+                led.n_fit[b] = n_fit
+                led.have_fit[b] = 1
+                led.y_mean[b], led.y_std[b] = _y_standardization(
+                    self._signed_y(obs)[:n_fit])
+                led.obs_stamp += 1   # defensive: hypers changed
 
     # ------------------------------------------------------- file checkpoint
     def save(self, path, iteration: int = 0) -> None:

@@ -108,6 +108,42 @@ def cond_proxy_from_chol(L: jax.Array, mask: jax.Array) -> jax.Array:
     return (dmax / jnp.maximum(dmin, 1e-30)) ** 2
 
 
+@functools.partial(jax.jit, static_argnames=("iters",))
+def cond_estimate(L: jax.Array, mask: jax.Array, iters: int = 16) -> jax.Array:
+    """Power-iteration estimate of cond₂(K) from its masked Cholesky factor.
+
+    ``cond_proxy_from_chol`` is a diagonal lower bound that runs 20-50x low
+    on correlated kernels; this estimate runs ``iters`` power-iteration
+    steps for λmax(K) (via ``K v = L (Lᵀ v)``) and λmax(K⁻¹) (via two
+    triangular solves) and multiplies the Rayleigh quotients, which lands
+    within ~2x of ``np.linalg.cond`` on the repro surface.  The masked
+    region of L is exactly identity (block-diagonal by construction), so
+    masking the start vector and every matvec keeps the iteration in the
+    active block.  Still cheap enough for the bank factor stage: O(iters·n²)
+    per study against the O(n³) Cholesky it rides along with.
+    """
+    m = (mask > 0).astype(L.dtype)
+    v0 = m / jnp.maximum(jnp.sqrt(jnp.sum(m)), 1.0)
+
+    def rayleigh(mv):
+        def body(v, _):
+            w = mv(v)
+            nrm = jnp.sqrt(jnp.sum(w * w))
+            return w / jnp.maximum(nrm, 1e-30), None
+        v, _ = jax.lax.scan(body, v0, None, length=iters)
+        return jnp.sum(v * mv(v))
+
+    def k_mv(v):
+        return (L @ ((v * m) @ L)) * m
+
+    def kinv_mv(v):
+        t = jax.scipy.linalg.solve_triangular(L, v * m, lower=True)
+        t = jax.scipy.linalg.solve_triangular(L, t, lower=True, trans=1)
+        return t * m
+
+    return jnp.maximum(rayleigh(k_mv) * rayleigh(kinv_mv), 1.0)
+
+
 def prescale(X, C, ls, block_s):
     """Zero-pad d to a lane multiple and S to a block multiple, pre-divided
     by the ARD lengthscales (padded columns contribute 0 to distances)."""

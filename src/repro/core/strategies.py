@@ -58,11 +58,14 @@ class BaseStrategy:
         twin (the parity path the 3-way near-tie tests drive).
 
     Every propose through a fitted GP also stages ``last_cond_proxy`` — a
-    host-visible condition-number lower bound for K from the Cholesky
-    diagonal, computed lazily on access (reading it costs one tiny device
-    program + sync; not reading it costs nothing); above
-    ``scoring.COND_PROXY_WARN`` a one-time warning fires on access
-    (float32 posterior scoring is presumed unreliable there).
+    host-visible condition-number estimate for K (power iteration on
+    K and K^{-1} through the Cholesky factor, ``scoring.cond_estimate``;
+    typically within ~2x of ``numpy.linalg.cond``, where the old
+    Cholesky-diagonal bound sat 20-50x low), computed lazily on access
+    (reading it costs one small device program + sync; not reading it
+    costs nothing); above ``scoring.COND_PROXY_WARN`` a one-time warning
+    fires on access (float32 posterior scoring is presumed unreliable
+    there).
     """
 
     needs_gp = True
@@ -101,18 +104,18 @@ class BaseStrategy:
 
     @property
     def last_cond_proxy(self) -> Optional[float]:
-        """Condition-number lower bound for the last propose's active
-        kernel window (None before the first GP-backed propose)."""
+        """Condition-number estimate for the last propose's active kernel
+        window (None before the first GP-backed propose)."""
         if self._cond_src is None:
             return None
         L, m, na = self._cond_src
         if na is not None:
             L, m = L[:na, :na], m[:na]
-        val = float(scoring.cond_proxy_from_chol(L, jnp.asarray(m)))
+        val = float(scoring.cond_estimate(L, jnp.asarray(m)))
         if val > scoring.COND_PROXY_WARN and not self._cond_warned:
             self._cond_warned = True
             warnings.warn(
-                f"GP kernel condition proxy {val:.2e} exceeds "
+                f"GP kernel condition estimate {val:.2e} exceeds "
                 f"{scoring.COND_PROXY_WARN:.0e}: float32 posterior scores "
                 "may be unreliable (consider a larger noise floor, or "
                 "enabling x64 for float64 Schur accumulation)",

@@ -14,12 +14,18 @@ studies, not one notebook loop.  This module gives the engine that shape:
   * ``StudyBank`` — N studies over one ledger.  ``ask_all`` gathers the
     bank into shape-bucketed device buffers (power-of-2 trial capacity, so
     a growing study re-enters a cached compiled program instead of
-    retracing) and serves every study in one vmap'd pass: the staged
-    ``gp.bank_*`` pipeline, ``tpe.fused_tpe_propose_bank``, or
-    ``acquisition.fused_cluster_propose_bank``.  Observation-dependent
-    device state (gather, factors, standardization) is cached on the
-    ledger's ``obs_stamp``, so ask/tell_failed churn never recomputes a
-    Cholesky.
+    retracing) and serves every study through the ONE staged proposal
+    pipeline: ``gp.bank_*`` stages feeding ``bank_pick`` (GP-BUCB),
+    ``bank_cluster_pick`` (clustering) or ``tpe.fused_tpe_propose_bank``.
+    Strategies are per-study data (a bank may mix GP, TPE and clustering
+    studies — ``ask_all`` sub-batches the dispatch per strategy family
+    within one columnar candidate draw).  Observation-dependent device
+    state (gather, factors, standardization) is cached on the ledger's
+    ``obs_stamp``, so ask/tell_failed churn never recomputes a Cholesky.
+  * Bank-of-one: a standalone ``AskTellOptimizer.ask`` routes through
+    ``ask_view`` on this same bucketed pipeline (``StudyBank._wrap_view``),
+    so the single-study hot path compiles once per power-of-2 bucket and
+    never retraces across observation growth.
   * One-write fleet checkpoints — ``save`` serializes the whole ledger
     pytree (plus a JSON meta block for params dicts / RNG streams) as a
     single ``.npz`` write; ``load`` restores every study mid-flight.
@@ -54,6 +60,32 @@ def _pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+# strategy name -> dispatch family for the bank pipeline.  "gp" and
+# "cluster" share the staged obs-dependent stages (factors, prescale,
+# standardization) and differ only in the pick head; "tpe" has its own
+# buffer layout; "random"/"legacy" rows ask through their own view.
+_FAMILY = {
+    "bayesian": "gp",
+    "hallucination": "gp",
+    "clustering": "cluster",
+    "tpe": "tpe",
+    "random": "random",
+    "hallucination_ref": "legacy",
+}
+
+
+def _y_standardization(v: np.ndarray):
+    """Frozen-standardization scalars over a signed f32 history, with the
+    exact op sequence of ``GaussianProcess.fit``: f32 numpy mean (exact
+    f32 round-trip) and ``float(v.std()) + 1e-6`` (f64 add, rounded to f32
+    at the consuming op).  Used by the bank fit schedule AND v1-checkpoint
+    restore so a resumed run standardizes bit-identically."""
+    v = np.asarray(v, np.float32)
+    if not len(v):
+        return np.float32(0.0), np.float32(1.0)
+    return np.float32(v.mean()), np.float32(float(v.std()) + 1e-6)
 
 
 # the one bit-generator the 6-word packed layout below encodes; checkpoints
@@ -249,18 +281,20 @@ jax.tree_util.register_pytree_node(
 
 
 class StudyBank:
-    """N independent studies over one ``StudyLedger``; one device dispatch
-    per ``ask_all``.
+    """N independent studies over one ``StudyLedger``; one sub-batched
+    device dispatch per strategy family per ``ask_all``.
 
-    Every study shares the parameter space and strategy type (a bank is a
-    homogeneous fleet — heterogeneous fleets are just multiple banks) but
-    owns its RNG stream, sign, counters and GP state, so per-study results
-    are reproducible independent of its bankmates' *values* (bucket shapes
-    are shared, proposals are not).
+    Every study shares the parameter space but owns its strategy, RNG
+    stream, sign, counters and GP state, so per-study results are
+    reproducible independent of its bankmates' *values* (bucket shapes are
+    shared, proposals are not).  ``optimizer`` may be one strategy name
+    (homogeneous fleet) or a per-study list — a mixed GP + TPE +
+    clustering fleet is served from one process with one columnar
+    candidate draw, the dispatch sub-batched per family.
     """
 
     def __init__(self, param_space, n_studies: int, *,
-                 optimizer: str = "bayesian", seed: int = 0,
+                 optimizer=None, seed: int = 0,
                  sign: float = 1.0, domain_size: Optional[float] = None,
                  mc_samples: Optional[int] = None, fit_steps: int = 40,
                  use_pallas: bool = False, pallas_interpret: bool = True,
@@ -270,7 +304,17 @@ class StudyBank:
         from repro.core.spaces import ParamSpace
         self.space = (param_space if isinstance(param_space, ParamSpace)
                       else ParamSpace(param_space))
-        self.optimizer = optimizer
+        if optimizer is None:
+            optimizer = "bayesian"
+        names = (list(optimizer)
+                 if isinstance(optimizer, (list, tuple))
+                 else [optimizer] * int(n_studies))
+        if len(names) != int(n_studies):
+            raise ValueError(
+                f"optimizer list has {len(names)} entries for "
+                f"{n_studies} studies")
+        self.strategy_names: List[str] = names
+        self.optimizer = (names[0] if len(set(names)) == 1 else "mixed")
         self.mc_samples = mc_samples
         self.fit_steps = fit_steps
         self.use_pallas = use_pallas
@@ -289,7 +333,7 @@ class StudyBank:
         # ask_all, independent of the per-study streams
         self._rng = np.random.default_rng(seed)
         self.studies: List[AskTellOptimizer] = [
-            AskTellOptimizer(self.space, optimizer=optimizer,
+            AskTellOptimizer(self.space, optimizer=names[i],
                              seed=seed + 1 + i, sign=sign,
                              domain_size=domain_size, mc_samples=mc_samples,
                              fit_steps=fit_steps, use_pallas=use_pallas,
@@ -298,6 +342,72 @@ class StudyBank:
                              strategy_kwargs=strategy_kwargs,
                              ledger=self.ledger, study_index=i)
             for i in range(n_studies)]
+        for v in self.studies:
+            v._bank = self
+        self._members = {i: v for i, v in enumerate(self.studies)}
+        self._rebuild_groups()
+
+    @classmethod
+    def _wrap_view(cls, view) -> "StudyBank":
+        """Bank-of-one engine over an existing view's ledger (what a
+        standalone ``AskTellOptimizer.ask`` routes through).  Shares the
+        view's ledger row and settings; the bank candidate stream is unused
+        (``ask_view`` draws through the view's own RNG, preserving the
+        pre-refactor per-study stream bit-for-bit)."""
+        bank = object.__new__(cls)
+        bank.space = view.space
+        bank.optimizer = view.optimizer
+        bank.mc_samples = view.mc_samples
+        bank.fit_steps = view.fit_steps
+        bank.use_pallas = view.use_pallas
+        bank.pallas_interpret = view.pallas_interpret
+        bank.refit_every = view.refit_every
+        bank.strategy_kwargs = dict(view.strategy_kwargs)
+        bank.seed = None
+        bank.ledger = view._led
+        bank._gp_cache = None
+        bank.op_seq = 0
+        bank.extra = None
+        bank._rng = None
+        bank.studies = [view]
+        bank.strategy_names = [view.optimizer]
+        bank._members = {view._b: view}
+        bank._rebuild_groups()
+        return bank
+
+    def _rebuild_groups(self) -> None:
+        """Recompute the strategy-family routing tables (and drop the
+        device cache, whose row layout depends on them)."""
+        fams = {b: _FAMILY.get(v.optimizer, "legacy")
+                for b, v in self._members.items()}
+        self._fams = fams
+        gpr = sorted(b for b, f in fams.items() if f in ("gp", "cluster"))
+        self._gp_fam_rows = np.array(gpr, np.int64)
+        self._gp_pos = {int(r): i for i, r in enumerate(gpr)}
+        bankable = np.zeros(self.ledger.n_studies, bool)
+        for b, f in fams.items():
+            bankable[b] = f in ("gp", "cluster", "tpe")
+        self._bankable = bankable
+        self._gp_cache = None
+
+    def set_strategy(self, b: int, name: str) -> None:
+        """Switch study ``b``'s strategy (per-study data, not bank code
+        paths).  Counters/observations are untouched; the next ask routes
+        through the new family's pick head."""
+        from repro.core.strategies import STRATEGIES
+        if name not in STRATEGIES:
+            raise ValueError(f"unknown optimizer {name!r}; "
+                             f"choose from {sorted(STRATEGIES)}")
+        b = int(b)
+        v = self.studies[b]
+        if v.optimizer != name:
+            v.optimizer = name
+            v._strat = None
+            self.strategy_names[b] = name
+        self.optimizer = (self.strategy_names[0]
+                          if len(set(self.strategy_names)) == 1
+                          else "mixed")
+        self._rebuild_groups()
 
     # -------------------------------------------------------------- basics
     @property
@@ -332,6 +442,13 @@ class StudyBank:
         view = self.studies[b]
         if kind == "create":
             float(op.get("sign", 1.0))
+            nm = op.get("optimizer")
+            if nm is not None:
+                from repro.core.strategies import STRATEGIES
+                if nm not in STRATEGIES:
+                    raise ValueError(
+                        f"unknown optimizer {nm!r}; choose from "
+                        f"{sorted(STRATEGIES)}")
         elif kind == "ask":
             if int(op["n"]) < 1:
                 raise ValueError("ask(n) requires n >= 1")
@@ -388,6 +505,9 @@ class StudyBank:
         try:
             if kind == "create":
                 view.sign = float(op.get("sign", 1.0))
+                nm = op.get("optimizer")
+                if nm is not None:
+                    self.set_strategy(b, nm)
                 result = view
             elif kind == "ask":
                 result = view.ask(int(op["n"]))
@@ -412,25 +532,25 @@ class StudyBank:
     def ask_all(self, n: int = 1) -> List[list]:
         """Propose ``n`` new trials for every study.
 
-        Studies still in the random phase (< 2 observations, or a random
-        bank) ask through their own view; every GP/TPE-phase study is
-        gathered into one shape-bucketed device batch and served by a
-        single vmap'd fused program.  Returns ``[trials_of_study_0, ...]``.
+        Studies still in the random phase (< 2 observations) or whose
+        strategy has no bank family (random / reference strategies) ask
+        through their own view; every other study is gathered into one
+        shape-bucketed device batch and served by the staged pipeline,
+        sub-batched per strategy family.  Returns
+        ``[trials_of_study_0, ...]``.
         """
         if n < 1:
             raise ValueError("ask_all(n) requires n >= 1")
         led = self.ledger
         B = led.n_studies
-        if self.optimizer == "random":
-            return [v.ask(n) for v in self.studies]
         n_obs = led.n_observed()
-        device = n_obs >= 2
+        device = (n_obs >= 2) & self._bankable
         out: List[Optional[list]] = [None] * B
         for b in np.nonzero(~device)[0]:
             out[b] = self.studies[int(b)].ask(n)
         if not device.any():
             return out
-        picks = self._ask_device(n, n_obs)
+        picks = self._ask_device(n, n_obs, device)
         # bulk registration: one fancy-indexed ledger write per field for
         # every device-phase study (the per-view ``_register_asked`` loop
         # was the last O(B) Python/ledger hot spot in the steady state);
@@ -459,9 +579,12 @@ class StudyBank:
             out[b] = trials
         return out
 
-    def _ask_device(self, n: int, n_obs: np.ndarray):
-        """One staged dispatch for the whole bank; returns
-        ``{study: (configs, encoded_rows)}`` for every GP-phase study."""
+    def _ask_device(self, n: int, n_obs: np.ndarray, device: np.ndarray):
+        """Per-family sub-batched dispatch over ONE columnar candidate
+        draw; returns ``{study: (configs, encoded_rows)}`` for every
+        device-phase study.  GP and clustering rows share the obs-stage
+        cache (gather, standardization, factors); each family pays one
+        pick program and one exit sync."""
         led, space = self.ledger, self.space
         B, d = led.n_studies, led.dim
         k_obs = n_obs.astype(np.int32)
@@ -471,195 +594,282 @@ class StudyBank:
         n_mc = self.mc_samples or self.space.mc_samples(n)
         # one columnar draw for the whole bank (no per-candidate dicts)
         cols = space.sample_columns(B * n_mc, self._rng)
-        Cflat = space.encode_columns(cols, B * n_mc)
-        C = np.asarray(Cflat, np.float32).reshape(B, n_mc, d)
-        if self.optimizer == "tpe":
-            Xd, yraw, mask = self._gather_obs(k_obs, na)
-            Pd = self._gather_pend(k_pend, pend_cap)
-            idx = self._dispatch_tpe(Xd, yraw, mask, Pd, C, k_obs, k_pend,
-                                     n, na)
-        else:
-            idx = self._dispatch_gp(C, k_obs, k_pend, n, na, pend_cap)
-        idx = jax.device_get(idx)   # the one designed exit sync per ask
-        dev = np.nonzero(n_obs >= 2)[0]
-        flat = (dev[:, None] * n_mc + idx[dev]).astype(np.int64)  # (k, n)
-        cfgs = self.space.configs_at(cols, flat.ravel())
-        enc = Cflat[flat.ravel()].reshape(len(dev), -1, Cflat.shape[1])
-        return {int(b): (cfgs[i * n:(i + 1) * n], enc[i])
-                for i, b in enumerate(dev)}
+        Cflat = np.asarray(space.encode_columns(cols, B * n_mc), np.float32)
+        C = Cflat.reshape(B, n_mc, d)
+        dev = np.nonzero(device)[0]
+        groups: Dict[str, np.ndarray] = {}
+        for f in ("gp", "cluster", "tpe"):
+            rows = np.array([int(b) for b in dev
+                             if self._fams[int(b)] == f], np.int64)
+            if len(rows):
+                groups[f] = rows
+        cache = None
+        if "gp" in groups or "cluster" in groups:
+            cache = self._obs_stage(k_obs, na)
+        picks: Dict[int, tuple] = {}
+        for f, rows in groups.items():
+            if f == "tpe":
+                Xd, yraw, _ = self._gather_obs(k_obs[rows], na, rows)
+                Pd = self._gather_pend(k_pend[rows], pend_cap, rows)
+                idx = self._dispatch_tpe(Xd, yraw, Pd, C[rows],
+                                         k_obs[rows], k_pend[rows], n, na)
+            else:
+                idx = self._pick_gp(cache, rows, f, C[rows], k_obs[rows],
+                                    k_pend[rows], n, na, pend_cap)
+            idx = np.asarray(jax.device_get(idx))   # one exit sync / family
+            flat = (rows[:, None] * n_mc + idx).astype(np.int64)  # (R, n)
+            cfgs = space.configs_at(cols, flat.ravel())
+            enc = Cflat[flat.ravel()].reshape(len(rows), -1, Cflat.shape[1])
+            for i, b in enumerate(rows):
+                picks[int(b)] = (cfgs[i * n:(i + 1) * n], enc[i])
+        return picks
 
-    def _gather_obs(self, k_obs: np.ndarray, na: int):
-        """Masked-rank observation gather at the bucket shape, vectorized
-        over the bank: one stable argsort of the completion order (empty /
-        pending / failed slots pushed past the horizon by a sentinel)
-        replaces the per-study ``obs_ids`` fancy-indexing loop.  Returns
-        ``(Xd (B, na, d), yraw signed (B, na), mask (B, na))``."""
+    def ask_view(self, view, n: int, cols, n_mc: int):
+        """Bank-of-one ask: one view's proposal served by the bucketed
+        pipeline.  Candidates arrive columnar, drawn by the *view's* own
+        RNG stream (so the pre-refactor per-study stream is preserved
+        bit-for-bit); bucket shapes stay bank-wide so a view inside a
+        fleet re-enters the same compiled programs as ``ask_all``.
+        Returns ``(configs, encoded_rows)`` for ``n`` picks."""
+        led, space = self.ledger, self.space
+        b = view._b
+        n = min(n, n_mc)
+        fam = self._fams[b]
+        k_obs = led.n_observed().astype(np.int32)
+        k_pend = led.n_pending().astype(np.int32)
+        pend_cap = max(4, -(-int(k_pend.max()) // 4) * 4)
+        na = _pow2(max(16, int(k_obs.max()) + pend_cap + n))
+        Cflat = np.asarray(space.encode_columns(cols, n_mc), np.float32)
+        C = Cflat.reshape(1, n_mc, led.dim)
+        rows = np.array([b], np.int64)
+        if fam == "tpe":
+            Xd, yraw, _ = self._gather_obs(k_obs[rows], na, rows)
+            Pd = self._gather_pend(k_pend[rows], pend_cap, rows)
+            idx = self._dispatch_tpe(Xd, yraw, Pd, C, k_obs[rows],
+                                     k_pend[rows], n, na)
+        else:
+            cache = self._obs_stage(k_obs, na)
+            idx = self._pick_gp(cache, rows, fam, C, k_obs[rows],
+                                k_pend[rows], n, na, pend_cap)
+        idx = np.asarray(jax.device_get(idx))[0].astype(np.int64)
+        return space.configs_at(cols, idx), Cflat[idx]
+
+    def _gather_obs(self, k_obs: np.ndarray, na: int, rows: np.ndarray):
+        """Masked-rank observation gather at the bucket shape for the
+        ``rows`` sub-batch: one stable argsort of the completion order
+        (empty / pending / failed slots pushed past the horizon by a
+        sentinel) replaces the per-study ``obs_ids`` fancy-indexing loop.
+        Returns ``(Xd (R, na, d), yraw signed (R, na), mask (R, na))``."""
         led = self.ledger
-        B, d, cap = led.n_studies, led.dim, led.capacity
+        d, cap = led.dim, led.capacity
+        R = len(rows)
         m = min(cap, na)
-        seq = np.where(led.status == S_OBSERVED, led.obs_seq,
+        status = led.status[rows]
+        seq = np.where(status == S_OBSERVED, led.obs_seq[rows],
                        np.iinfo(np.int32).max)
         order = np.argsort(seq, axis=1, kind="stable")[:, :m]
-        rows = np.arange(B)[:, None]
+        rr = np.arange(R)[:, None]
         valid = np.arange(m)[None, :] < k_obs[:, None]
-        sign = np.array([v.sign for v in self.studies])[:, None]
-        Xd = np.zeros((B, na, d), np.float32)
-        yraw = np.zeros((B, na), np.float32)     # signed, unstandardized
-        mask = np.zeros((B, na), np.float32)
-        Xd[:, :m] = np.where(valid[..., None], led.X[rows, order], 0.0)
-        yraw[:, :m] = np.where(valid, sign * led.y[rows, order],
+        sign = np.array([self._members[int(b)].sign
+                         for b in rows])[:, None]
+        Xsub, ysub = led.X[rows], led.y[rows]
+        Xd = np.zeros((R, na, d), np.float32)
+        yraw = np.zeros((R, na), np.float32)     # signed, unstandardized
+        mask = np.zeros((R, na), np.float32)
+        Xd[:, :m] = np.where(valid[..., None], Xsub[rr, order], 0.0)
+        yraw[:, :m] = np.where(valid, sign * ysub[rr, order],
                                0.0).astype(np.float32)
         mask[:, :m] = valid
         return Xd, yraw, mask
 
-    def _gather_pend(self, k_pend: np.ndarray, pend_cap: int) -> np.ndarray:
+    def _gather_pend(self, k_pend: np.ndarray, pend_cap: int,
+                     rows: np.ndarray) -> np.ndarray:
         """In-flight rows at the ``pend_cap`` shape (ascending trial id,
-        like ``pending_ids``), vectorized over the bank.  Never cached —
+        like ``pending_ids``) for the ``rows`` sub-batch.  Never cached —
         pending churn happens every ask/tell_failed."""
         led = self.ledger
-        B, d, cap = led.n_studies, led.dim, led.capacity
-        Pd = np.zeros((B, pend_cap, d), np.float32)
+        d, cap = led.dim, led.capacity
+        R = len(rows)
+        Pd = np.zeros((R, pend_cap, d), np.float32)
         if int(k_pend.max()):
-            ids = np.where(led.status == S_PENDING,
+            status = led.status[rows]
+            ids = np.where(status == S_PENDING,
                            np.arange(cap)[None, :], np.iinfo(np.int32).max)
             order = np.argsort(ids, axis=1, kind="stable")[:, :pend_cap]
-            rows = np.arange(B)[:, None]
+            rr = np.arange(R)[:, None]
             valid = np.arange(pend_cap)[None, :] < k_pend[:, None]
-            Pd[:] = np.where(valid[..., None], led.X[rows, order], 0.0)
+            Pd[:] = np.where(valid[..., None], led.X[rows][rr, order], 0.0)
         return Pd
 
-    def _fit_if_due(self, Xd, yraw, mask, k_obs):
-        """Count-based bank fit schedule: (re)fit hypers for every study
-        whose observation count advanced ``refit_every`` past its last fit
-        (or that never fit).  The fit program always runs over the full
-        bank at the bucket shape — selective write-back keeps non-due
-        studies' frozen hypers (and frozen y standardization) bit-stable.
-        """
+    def _fit_if_due(self, Xd, yraw, mask, ko, rows) -> bool:
+        """Count-based fit schedule over the gp-family sub-batch: (re)fit
+        hypers for every study whose observation count advanced
+        ``refit_every`` past its last fit (or that never fit).  The fit
+        program runs over the whole sub-batch at the bucket shape —
+        selective write-back keeps non-due studies' frozen hypers (and
+        frozen y standardization) bit-stable.  Standardization scalars are
+        computed on the host with the exact single-study op sequence
+        (``_y_standardization``), so a study served by the bank
+        standardizes bit-identically to the pre-refactor engine.
+        Returns True when anything refit (obs stamp was bumped)."""
         led = self.ledger
-        due = ((led.have_fit == 0) |
-               (k_obs.astype(np.int64) - led.n_fit >= self.refit_every))
-        due &= k_obs >= 2
+        ko64 = ko.astype(np.int64)
+        due = ((led.have_fit[rows] == 0) |
+               (ko64 - led.n_fit[rows] >= self.refit_every))
+        # frozen-standardization sanity (the ``GaussianProcess.observe``
+        # guard): a degenerate fit (y_std ~ 1e-6 from constant initial
+        # observations) would blow incoming values up to ~1e6 standardized
+        # and wreck the acquisition surface for up to refit_every asks —
+        # re-tune immediately instead.  Checked over everything observed
+        # since the last fit so replay reaches the same decision.
+        for i, r in enumerate(rows):
+            if due[i] or not led.have_fit[r]:
+                continue
+            nf, k = int(led.n_fit[r]), int(ko64[i])
+            if k > nf:
+                zt = (np.abs(yraw[i, nf:k] - led.y_mean[r])
+                      / led.y_std[r])
+                if zt.size and float(zt.max()) > 1e3:
+                    due[i] = True
+        due &= ko64 >= 2
         if not due.any():
-            return
+            return False
         from repro.core import gp as gp_lib
-        lls, lv, ln, ym, ys = gp_lib.fit_hypers_bank(
-            Xd, yraw, mask, led.log_ls, led.log_var, led.log_noise,
-            steps=self.fit_steps)
+        ym = led.y_mean[rows].copy()
+        ys = led.y_std[rows].copy()
         sel = np.nonzero(due)[0]
-        # one explicit exit transfer for all five hyper arrays
-        lls, lv, ln, ym, ys = jax.device_get((lls, lv, ln, ym, ys))
-        led.log_ls[sel] = lls[sel]
-        led.log_var[sel] = lv[sel]
-        led.log_noise[sel] = ln[sel]
-        led.y_mean[sel] = ym[sel]
-        led.y_std[sel] = ys[sel]
-        led.n_fit[sel] = k_obs[sel]
-        led.have_fit[sel] = 1
+        for i in sel:
+            ym[i], ys[i] = _y_standardization(yraw[i, :int(ko64[i])])
+        lls, lv, ln = gp_lib.fit_hypers_bank(
+            Xd, yraw, mask, led.log_ls[rows], led.log_var[rows],
+            led.log_noise[rows], ym, ys, steps=self.fit_steps)
+        # one explicit exit transfer for the three hyper arrays
+        lls, lv, ln = jax.device_get((lls, lv, ln))
+        g = np.asarray(rows)[sel]
+        led.log_ls[g] = lls[sel]
+        led.log_var[g] = lv[sel]
+        led.log_noise[g] = ln[sel]
+        led.y_mean[g] = ym[sel]
+        led.y_std[g] = ys[sel]
+        led.n_fit[g] = ko64[sel]
+        led.have_fit[g] = 1
         led.obs_stamp += 1    # new hypers/standardization: factors stale
+        return True
 
-    def _dispatch_gp(self, C, k_obs, k_pend, n, na, pend_cap):
-        """The staged bank ask (see the stage comments in ``core.gp``).
-
-        Stages whose inputs depend only on *observations* — the masked
-        gather, frozen standardization, hypers, prescale, Cholesky factors
-        — are cached on the ledger's ``obs_stamp`` + bucket shape, so the
+    def _obs_stage(self, k_obs: np.ndarray, na: int):
+        """Observation-dependent stages for every gp-family row (GP and
+        clustering share them): masked gather, fit schedule, frozen
+        standardization, prescale, Cholesky factors + condition estimate.
+        Cached on the ledger's ``obs_stamp`` + bucket shape, so the
         ask/tell_failed steady state pays only the candidate-dependent
-        stages (prescale-C, distances, exp, pick) plus a pending absorb
-        when something is actually in flight.
-        """
-        from repro.core import acquisition as acq_lib
+        pick stages."""
+        led = self.ledger
+        gpr = self._gp_fam_rows
+        ko = k_obs[gpr]
+        signs = tuple(self._members[int(b)].sign for b in gpr)
+        key = (led.obs_stamp, na, signs)
+        cache = self._gp_cache
+        if cache is not None and cache["key"] == key:
+            return cache
+        from repro.core import gp as gp_lib
+        Xd, yraw, mask = self._gather_obs(ko, na, gpr)
+        if self._fit_if_due(Xd, yraw, mask, ko, gpr):
+            key = (led.obs_stamp, na, signs)
+        # frozen standardization, exactly the single-study GP contract
+        z = (yraw - led.y_mean[gpr][:, None]) / led.y_std[gpr][:, None]
+        z = (z * mask).astype(np.float32)
+        ls = np.exp(led.log_ls[gpr]).astype(np.float32)
+        var = np.exp(led.log_var[gpr]).astype(np.float32)
+        noise = (np.exp(led.log_noise[gpr]) + 1e-5).astype(np.float32)
+        L, Linv, cond = gp_lib.bank_factors(Xd, mask, ls, var, noise)
+        Xs = gp_lib.bank_prescale_X(Xd, ls)
+        led.ensure_gp_capacity(na)
+        L_host, Linv_host, cond_host = jax.device_get((L, Linv, cond))
+        led.L[gpr, :na, :na] = L_host
+        led.Linv[gpr, :na, :na] = Linv_host
+        cache = self._gp_cache = {
+            "key": key, "Xs": Xs, "z": jnp.asarray(z),
+            "mask": jnp.asarray(mask), "L": L, "Linv": Linv,
+            "ls": jnp.asarray(ls), "var": jnp.asarray(var),
+            "noise": jnp.asarray(noise),
+            "cond": np.asarray(cond_host, np.float64)}
+        self._warn_if_ill_conditioned(cache["cond"], gpr)
+        return cache
+
+    def _warn_if_ill_conditioned(self, cond: np.ndarray,
+                                 gpr: np.ndarray) -> None:
+        import warnings
+        from repro.core import scoring
+        if getattr(self, "_cond_warned", False):
+            return
+        bad = np.nonzero(cond > scoring.COND_PROXY_WARN)[0]
+        if len(bad):
+            self._cond_warned = True
+            b = int(gpr[bad[0]])
+            warnings.warn(
+                f"study {b}: GP kernel condition estimate "
+                f"{cond[bad[0]]:.2e} exceeds {scoring.COND_PROXY_WARN:.0e};"
+                " posterior scores may be unreliable (consider more noise"
+                " or fewer near-duplicate observations)", RuntimeWarning)
+
+    def _pick_gp(self, cache, rows, fam, C, ko, kp, n, na, pend_cap):
+        """Candidate-dependent stages for one family sub-batch, sliced
+        out of the shared obs-stage cache: prescale-C, pending absorb,
+        distances, exp, and the family's pick head (GP-BUCB downdate loop
+        or clustered-batch top-k/k-means/argmax)."""
         from repro.core import gp as gp_lib
         led = self.ledger
-        signs = tuple(v.sign for v in self.studies)
-        due = ((led.have_fit == 0) |
-               (k_obs.astype(np.int64) - led.n_fit >= self.refit_every))
-        due &= k_obs >= 2
-        cache = self._gp_cache
-        key = (led.obs_stamp, na, signs)
-        clustering = self.optimizer == "clustering"
-        if clustering or due.any() or cache is None or cache["key"] != key:
-            Xd, yraw, mask = self._gather_obs(k_obs, na)
-            self._fit_if_due(Xd, yraw, mask, k_obs)
-            key = (led.obs_stamp, na, signs)
-        dom = float(self.studies[0].domain_size)
-        if clustering:
-            # frozen standardization, exactly the single-study GP contract
-            z = (yraw - led.y_mean[:, None]) / led.y_std[:, None]
-            z = (z * mask).astype(np.float32)
-            ls = np.exp(led.log_ls).astype(np.float32)
-            var = np.exp(led.log_var).astype(np.float32)
-            noise = (np.exp(led.log_noise) + 1e-5).astype(np.float32)
-            Pd = self._gather_pend(k_pend, pend_cap)
+        pos = np.array([self._gp_pos[int(r)] for r in rows])
+        full = (len(pos) == len(self._gp_fam_rows)
+                and np.array_equal(pos, np.arange(len(pos))))
+        take = (lambda a: a) if full else (lambda a: a[pos])
+        ls, var, noise = take(cache["ls"]), take(cache["var"]), \
+            take(cache["noise"])
+        Xs, z, maskd = take(cache["Xs"]), take(cache["z"]), \
+            take(cache["mask"])
+        L, Linv = take(cache["L"]), take(cache["Linv"])
+        Cs = gp_lib.bank_prescale_C(C, ls)
+        if int(kp.max()):
+            Pd = self._gather_pend(kp, pend_cap, rows)
+            Xs, z, maskd, L, Linv = gp_lib.bank_absorb(
+                Xs, z, maskd, L, Linv, Pd, kp.astype(np.float32),
+                ko.astype(np.float32), ls, var, noise, pend_cap=pend_cap)
+        d2, s = gp_lib.bank_dist(Cs, Xs)
+        e = gp_lib.bank_exp(s)
+        n_eff = (ko + kp).astype(np.float32)
+        dom = np.float32(self._members[int(rows[0])].domain_size)
+        if fam == "cluster":
             from repro.core.strategies import n_top_candidates
             top_frac = self.strategy_kwargs.get("top_frac", 0.2)
             n_top = n_top_candidates(C.shape[1], n, top_frac)
-            # one vmap'd seeding dispatch for the whole bank (J101/J102:
-            # a per-study PRNGKey loop is B device calls + B host reads)
+            # one vmap'd seeding dispatch for the sub-batch (J101/J102:
+            # a per-study PRNGKey loop is R device calls + R host reads)
             keys = jax.vmap(jax.random.PRNGKey)(
-                jnp.asarray(led.ask_count[:led.n_studies], jnp.uint32))
-            idx, L, Linv = acq_lib.fused_cluster_propose_bank(
-                Xd, z, mask, Pd, k_pend.astype(np.float32), C, ls, var,
-                noise, k_obs.astype(np.float32), np.float32(dom), keys,
-                batch_size=n, n_top=n_top, pend_cap=pend_cap,
-                use_pallas=False, interpret=self.pallas_interpret)
-            led.ensure_gp_capacity(na)
-            L_host, Linv_host = jax.device_get((L, Linv))
-            led.L[:, :na, :na] = L_host
-            led.Linv[:, :na, :na] = Linv_host
-            return idx
-        cache = self._gp_cache
-        if cache is None or cache["key"] != key:
-            # observation-dependent stages (rebuilt only when obs changed)
-            z = (yraw - led.y_mean[:, None]) / led.y_std[:, None]
-            z = (z * mask).astype(np.float32)
-            ls = np.exp(led.log_ls).astype(np.float32)
-            var = np.exp(led.log_var).astype(np.float32)
-            noise = (np.exp(led.log_noise) + 1e-5).astype(np.float32)
-            L, Linv = gp_lib.bank_factors(Xd, mask, ls, var, noise)
-            Xs = gp_lib.bank_prescale_X(Xd, ls)
-            cache = self._gp_cache = {
-                "key": key, "Xs": Xs, "z": jnp.asarray(z),
-                "mask": jnp.asarray(mask), "L": L, "Linv": Linv,
-                "ls": jnp.asarray(ls), "var": jnp.asarray(var),
-                "noise": jnp.asarray(noise)}
-            led.ensure_gp_capacity(na)
-            L_host, Linv_host = jax.device_get((L, Linv))
-            led.L[:, :na, :na] = L_host
-            led.Linv[:, :na, :na] = Linv_host
-        # candidate-dependent stages (every ask)
-        Cs = gp_lib.bank_prescale_C(C, cache["ls"])
-        Xs, z, maskd = cache["Xs"], cache["z"], cache["mask"]
-        L, Linv = cache["L"], cache["Linv"]
-        if int(k_pend.max()):
-            Pd = self._gather_pend(k_pend, pend_cap)
-            Xs, z, maskd, L, Linv = gp_lib.bank_absorb(
-                Xs, z, maskd, L, Linv, Pd, k_pend.astype(np.float32),
-                k_obs.astype(np.float32), cache["ls"], cache["var"],
-                cache["noise"], pend_cap=pend_cap)
-        d2, s = gp_lib.bank_dist(Cs, Xs)
-        e = gp_lib.bank_exp(s)
+                jnp.asarray(led.ask_count[rows], jnp.uint32))
+            return gp_lib.bank_cluster_pick(
+                d2, s, e, jnp.asarray(C), z, maskd, Linv, var, noise,
+                n_eff, dom, keys, batch_size=n, n_top=n_top, S=C.shape[1])
         return gp_lib.bank_pick(
-            d2, s, e, Cs, z, maskd, L, Linv, cache["var"], cache["noise"],
-            (k_obs + k_pend).astype(np.float32), np.float32(dom),
-            batch_size=n, S=C.shape[1])
+            d2, s, e, Cs, z, maskd, L, Linv, var, noise, n_eff,
+            dom, batch_size=n, S=C.shape[1])
 
-    def _dispatch_tpe(self, Xd, yraw, mask, Pd, C, k_obs, k_pend, n, na):
+    def _dispatch_tpe(self, Xd, yraw, Pd, C, k_obs, k_pend, n, na):
         from repro.core import tpe as tpe_lib
         from repro.kernels.tpe_kde.ops import pad_dims
-        led = self.ledger
-        B, d = led.n_studies, led.dim
+        d = self.ledger.dim
+        R = Xd.shape[0]
         dp = pad_dims(d)
         # TPE layout: observed rows, then pending rows, then zeros
-        Xt = np.zeros((B, na, dp), np.float32)
-        yt = np.zeros((B, na), np.float32)
-        for b in range(B):
-            ko, kp = int(k_obs[b]), int(k_pend[b])
-            Xt[b, :ko, :d] = Xd[b, :ko]
-            yt[b, :ko] = yraw[b, :ko]
+        Xt = np.zeros((R, na, dp), np.float32)
+        yt = np.zeros((R, na), np.float32)
+        for i in range(R):
+            ko, kp = int(k_obs[i]), int(k_pend[i])
+            Xt[i, :ko, :d] = Xd[i, :ko]
+            yt[i, :ko] = yraw[i, :ko]
             if kp:
-                Xt[b, ko:ko + kp, :d] = Pd[b, :kp]
+                Xt[i, ko:ko + kp, :d] = Pd[i, :kp]
         Sp = C.shape[1]
-        Ct = np.zeros((B, Sp, dp), np.float32)
+        Ct = np.zeros((R, Sp, dp), np.float32)
         Ct[:, :, :d] = C
         gamma = self.strategy_kwargs.get("gamma", 0.25)
         pending_penalty = self.strategy_kwargs.get("pending_penalty", False)
@@ -667,8 +877,8 @@ class StudyBank:
                   else np.zeros_like(k_pend))
         meta = np.stack([k_obs.astype(np.float32),
                          kp_eff.astype(np.float32),
-                         np.full((B,), Sp, np.float32),
-                         np.full((B,), gamma, np.float32)], axis=1)
+                         np.full((R,), Sp, np.float32),
+                         np.full((R,), gamma, np.float32)], axis=1)
         return tpe_lib.fused_tpe_propose_bank(
             Xt, yt, Ct, meta, batch_size=n, d_true=d,
             use_pallas=False, interpret=self.pallas_interpret)
@@ -684,6 +894,7 @@ class StudyBank:
             "kind": "study_bank",
             "n_studies": self.n_studies,
             "rng_state": self._rng.bit_generator.state,
+            "strategies": list(self.strategy_names),
             "studies": [v.state_dict() for v in self.studies],
             # the bank fit schedule lives in the ledger, not the views'
             # strategy GPs — carried bank-level so the per-study entries
@@ -706,6 +917,10 @@ class StudyBank:
             raise ValueError(f"bank holds {self.n_studies} studies, "
                              f"snapshot has {sd['n_studies']}")
         self._rng = rng_from_state(sd["rng_state"])
+        # restore per-study strategies before the view loads (pre-mixed
+        # snapshots carry no "strategies" key: names stay as constructed)
+        for b, nm in enumerate(sd.get("strategies", [])):
+            self.set_strategy(b, nm)
         for v, s in zip(self.studies, sd["studies"]):
             v.load_state_dict(s)      # resets the ledger row first
         led = self.ledger
@@ -739,7 +954,9 @@ class StudyBank:
         arrays = {f"led_{name}": np.asarray(leaf) for name, leaf
                   in zip(StudyLedger.ARRAY_FIELDS, leaves)}
         meta = {
-            "version": 1,
+            # v2: per-study "strategy" column (mixed banks); v1 checkpoints
+            # (no strategy key) load unchanged — names stay as constructed
+            "version": 2,
             "kind": "study_bank",
             "rng_kind": RNG_KIND,
             "iteration": iteration,
@@ -750,10 +967,9 @@ class StudyBank:
             "bank_rng_state": self._rng.bit_generator.state,
             "studies": [{
                 "sign": v.sign,
+                "strategy": self.strategy_names[b],
                 "best_trace": list(v._best_trace),
-                "gp": (getattr(v._strat, "gp", None).export_state()
-                       if getattr(v._strat, "gp", None) is not None
-                       else v._gp_snapshot),
+                "gp": v._gp_export(),
                 "params": [_to_jsonable(v._trials[i].params)
                            for i in range(int(led.n_trials[b]))],
             } for b, v in enumerate(self.studies)],
@@ -796,6 +1012,9 @@ class StudyBank:
         self._rng = rng_from_state(meta["bank_rng_state"])
         for b, v in enumerate(self.studies):
             ms = meta["studies"][b]
+            nm = ms.get("strategy")
+            if nm is not None:     # v2 meta; v1 keeps constructed names
+                self.set_strategy(b, nm)
             v.sign = ms["sign"]
             v._best_trace = list(ms["best_trace"])
             v._gp_snapshot = ms["gp"]

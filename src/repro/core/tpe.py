@@ -7,8 +7,9 @@ the comparison:
 
   * split observations into good/bad by the gamma-quantile of y,
   * model each encoded dimension with 1D Parzen windows (Gaussian KDE with
-    Scott bandwidth; categoricals are one-hot-encoded so the same KDE works
-    as a smoothed frequency estimate),
+    a per-dimension bandwidth: Scott base scaled by each dim's split
+    spread, so one-hot-encoded categoricals — whose 0/1 support a d-global
+    rule oversmooths — act as a sharper smoothed frequency estimate),
   * score candidates by l(x)/g(x) (expected-improvement surrogate) and take
     the top of the Monte-Carlo candidate set,
   * parallel batches take the top-b scores (Hyperopt's naive parallelism —
@@ -89,19 +90,31 @@ def fused_tpe_propose(X, y, C, meta, *, batch_size: int, d_true: int,
     wb = jnp.minimum(wb_obs + pend_mask, 1.0)        # pessimistic liar
     ng = jnp.sum(wg)
     nb = jnp.sum(wb)
-    bw_g = scott_bandwidth(ng, d_true)
-    bw_b = scott_bandwidth(nb, d_true)
-    # per-row bandwidth scale: gamma <= 0.5 keeps the splits disjoint, so
-    # each row carries its own split's 1/(2 bw^2) and one exp per
-    # (candidate, row, dim) feeds both densities
-    a_row = jnp.where(good, 0.5 / (bw_g * bw_g), 0.5 / (bw_b * bw_b))
+    # per-DIM bandwidths: Scott base scaled by each split's per-dim spread
+    # (clipped 2*std), so low-variance dims — categorical one-hot columns
+    # especially — get a sharper kernel than the d-global rule's
+    Xd = X[:, :d_true]
+    mg = (wg @ Xd) / jnp.maximum(ng, 1.0)                     # (d,)
+    vg = (wg @ (Xd - mg) ** 2) / jnp.maximum(ng, 1.0)
+    mb = (wb @ Xd) / jnp.maximum(nb, 1.0)
+    vb = (wb @ (Xd - mb) ** 2) / jnp.maximum(nb, 1.0)
+    bw_g = scott_bandwidth(ng, d_true) \
+        * jnp.clip(2.0 * jnp.sqrt(vg), 0.1, 1.0)             # (d,)
+    bw_b = scott_bandwidth(nb, d_true) \
+        * jnp.clip(2.0 * jnp.sqrt(vb), 0.1, 1.0)
+    # per-row per-dim bandwidth scale: gamma <= 0.5 keeps the splits
+    # disjoint, so each row carries its own split's 1/(2 bw_j^2) vector and
+    # one exp per (candidate, row, dim) feeds both densities
+    a = jnp.zeros(X.shape, jnp.float32).at[:, :d_true].set(
+        jnp.where(good[:, None], (0.5 / (bw_g * bw_g))[None, :],
+                  (0.5 / (bw_b * bw_b))[None, :]))
     scal = jnp.stack([1.0 / ng, 1.0 / nb, jnp.float32(0.0),
                       jnp.float32(0.0)])[None, :]
     if use_pallas:
-        score = tpe_scores_pallas(C, X, a_row, wg, wb, scal, d_true=d_true,
+        score = tpe_scores_pallas(C, X, a, wg, wb, scal, d_true=d_true,
                                   block_s=block_s, interpret=interpret)
     else:
-        score = tpe_scores_ref(C, X, a_row, wg, wb, scal, d_true=d_true)
+        score = tpe_scores_ref(C, X, a, wg, wb, scal, d_true=d_true)
     score = jnp.where(jnp.arange(C.shape[0]) < n_cand, score, -jnp.inf)
     _, idx = jax.lax.top_k(score, batch_size)
     return idx
@@ -158,9 +171,20 @@ class TPEStrategy(BaseStrategy):
 
     @staticmethod
     def _scott_bw(n_pts: int, d: int) -> np.float32:
-        """Scott-rule bandwidth, computed in float32 like the device."""
+        """Scott-rule base bandwidth, computed in float32 like the device."""
         return max(np.float32(max(n_pts, 1)) ** np.float32(-1.0 / (d + 4)),
                    np.float32(1e-2)) * np.float32(0.5) + np.float32(1e-3)
+
+    @staticmethod
+    def _dim_scale(pts: np.ndarray) -> np.ndarray:
+        """Per-dim bandwidth scale clip(2*std_j, 0.1, 1.0) in f32 — the
+        host twin of the device's masked-moment computation."""
+        p = np.asarray(pts, np.float32)
+        n = np.float32(max(len(p), 1))
+        mean = p.sum(axis=0, dtype=np.float32) / n
+        var = ((p - mean) ** 2).sum(axis=0, dtype=np.float32) / n
+        return np.clip(np.float32(2.0) * np.sqrt(var),
+                       np.float32(0.1), np.float32(1.0))
 
     @staticmethod
     def _kde_sum(pts: np.ndarray, x: np.ndarray, bw) -> np.ndarray:
@@ -200,8 +224,10 @@ class TPEStrategy(BaseStrategy):
                     and len(pending)) else Xa[:0])
         ng = len(good)
         nb = (len(bad) if len(bad) else ng) + len(pend)
-        bw_g = self._scott_bw(ng, d)
-        bw_b = self._scott_bw(nb, d)
+        bad_eff = bad if len(bad) else good
+        b_pts = (np.concatenate([bad_eff, pend]) if len(pend) else bad_eff)
+        bw_g = self._scott_bw(ng, d) * self._dim_scale(good)      # (d,)
+        bw_b = self._scott_bw(nb, d) * self._dim_scale(b_pts)
         candidates = np.asarray(candidates)
         batch_size = min(batch_size, len(candidates))
         lg = np.log(self._kde_sum(good, candidates, bw_g) / ng

@@ -41,16 +41,19 @@ def parzen_logdens_ref(cands, pts, w, inv2bw2, inv_n, d_true: int):
 _MAX_ELEMS = 4_000_000   # (block, n, 2d) temporary cap (16 MB f32)
 
 
-def tpe_scores_ref(cands, pts, a_row, wg, wb, scal, *, d_true: int):
+def tpe_scores_ref(cands, pts, a, wg, wb, scal, *, d_true: int):
     """l(x)/g(x) log-ratio for every candidate; the oracle the fused kernel
     is tested against.
 
-    ``a_row`` (n,) is the per-row ``1/(2 bw^2)`` scale — with gamma <= 0.5
-    every observation belongs to exactly one split, so each row carries its
-    own split's bandwidth and ONE exp per (candidate, row, dim) covers both
-    densities — the same m*n*d exp count as the numpy host oracle (the
-    two-mask dual-exp formulation paid exactly double).  ``wg``/``wb``
-    (n,) are the 0/1 split memberships and ``scal`` packs
+    ``a`` (n, dp) is the per-row per-DIM ``1/(2 bw_j^2)`` scale — with
+    gamma <= 0.5 every observation belongs to exactly one split, so each
+    row carries its own split's bandwidth vector and ONE exp per
+    (candidate, row, dim) covers both densities — the same m*n*d exp count
+    as the numpy host oracle (the two-mask dual-exp formulation paid
+    exactly double).  Per-dim bandwidths (Scott base scaled by each dim's
+    split spread) sharpen low-variance dims — categorical one-hot columns
+    especially, whose 0/1 support a d-global bandwidth oversmooths.
+    ``wg``/``wb`` (n,) are the 0/1 split memberships and ``scal`` packs
     [1/n_g, 1/n_b, 0, 0] (the (1, 4) row the Pallas kernel consumes).
 
     Shapes are static at trace time, so the streaming decision is free:
@@ -66,7 +69,7 @@ def tpe_scores_ref(cands, pts, a_row, wg, wb, scal, *, d_true: int):
 
     def score_block(cb):
         d2 = (cb[:, None, :d_true] - Xd[None, :, :]) ** 2     # (b, n, d)
-        E = jnp.exp(-d2 * a_row[None, :, None])               # (b, n, d)
+        E = jnp.exp(-d2 * a[None, :, :d_true])                # (b, n, d)
         densg = jnp.einsum("snd,n->sd", E, wg) * scal[0, 0] + 1e-12
         densb = jnp.einsum("snd,n->sd", E, wb) * scal[0, 1] + 1e-12
         return jnp.sum(jnp.log(densg) - jnp.log(densb), axis=-1)

@@ -33,13 +33,15 @@ def _tpe_score_kernel(c_ref, x_ref, a_ref, wg_ref, wb_ref, scal_ref,
                       out_ref, *, d_true: int):
     """One grid step: score a (BS, dp) block of candidates.
 
-    a_ref is the (1, n) per-row ``1/(2 bw^2)`` scale; scal_ref packs
+    a_ref is the (n, dp) per-row per-DIM ``1/(2 bw_j^2)`` scale (each row
+    carries its split's bandwidth vector; per-dim bandwidths sharpen
+    low-variance dims such as categorical one-hots); scal_ref packs
     [1/n_good, 1/n_bad, 0, 0] as a (1, 4) f32 row (the suite's
     SMEM-portable scalar idiom).
     """
     c = c_ref[...]                      # (BS, dp)
     x = x_ref[...]                      # (n, dp)
-    a = a_ref[...]                      # (1, n)  per-row bandwidth scale
+    a = a_ref[...]                      # (n, dp) per-row per-dim scale
     wg = wg_ref[...]                    # (1, n)  good-split membership
     wb = wb_ref[...]                    # (1, n)  bad-split membership
     inv_ng = scal_ref[0, 0]
@@ -48,7 +50,7 @@ def _tpe_score_kernel(c_ref, x_ref, a_ref, wg_ref, wb_ref, scal_ref,
     acc = jnp.zeros((c.shape[0],), jnp.float32)
     for j in range(d_true):             # static: true dims only
         d2 = (c[:, j:j + 1] - x[:, j:j + 1].T) ** 2          # (BS, n)
-        k = jnp.exp(-d2 * a)            # one exp serves both densities
+        k = jnp.exp(-d2 * a[:, j:j + 1].T)   # one exp serves both densities
         densg = jnp.sum(k * wg, axis=-1) * inv_ng + 1e-12    # (BS,)
         densb = jnp.sum(k * wb, axis=-1) * inv_nb + 1e-12
         acc = acc + jnp.log(densg) - jnp.log(densb)
@@ -57,10 +59,11 @@ def _tpe_score_kernel(c_ref, x_ref, a_ref, wg_ref, wb_ref, scal_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("d_true", "block_s", "interpret"))
-def tpe_scores_pallas(cands, pts, a_row, wg, wb, scal, *, d_true: int,
+def tpe_scores_pallas(cands, pts, a, wg, wb, scal, *, d_true: int,
                       block_s: int = 256, interpret: bool = True):
-    """cands (S, dp) with S a block multiple; pts (n, dp); a_row/wg/wb
-    (n,); scal (1, 4).  Returns the (S,) l/g log-ratio scores."""
+    """cands (S, dp) with S a block multiple; pts (n, dp); a (n, dp)
+    per-row per-dim bandwidth scale; wg/wb (n,); scal (1, 4).  Returns
+    the (S,) l/g log-ratio scores."""
     S, dp = cands.shape
     n = pts.shape[0]
     grid = (S // block_s,)
@@ -70,7 +73,7 @@ def tpe_scores_pallas(cands, pts, a_row, wg, wb, scal, *, d_true: int,
         in_specs=[
             pl.BlockSpec((block_s, dp), lambda i: (i, 0)),   # candidate tile
             pl.BlockSpec((n, dp), lambda i: (0, 0)),         # obs (resident)
-            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, dp), lambda i: (0, 0)),         # per-dim scale
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((1, 4), lambda i: (0, 0)),
@@ -79,7 +82,7 @@ def tpe_scores_pallas(cands, pts, a_row, wg, wb, scal, *, d_true: int,
         out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
         interpret=interpret,
     )(cands.astype(jnp.float32), pts.astype(jnp.float32),
-      a_row[None, :].astype(jnp.float32), wg[None, :].astype(jnp.float32),
+      a.astype(jnp.float32), wg[None, :].astype(jnp.float32),
       wb[None, :].astype(jnp.float32), scal.astype(jnp.float32))
     return out[:, 0]
 

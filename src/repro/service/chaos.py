@@ -53,6 +53,7 @@ KILL_TAGS = [
     ("compact.before_snapshot", 1),
     ("compact.after_snapshot", 1),
     ("compact.after_truncate", 1),
+    ("compact.background", 1),     # dies inside the compactor daemon
 ]
 
 DEFAULT_CONFIG = {
@@ -64,7 +65,12 @@ DEFAULT_CONFIG = {
     "mc_samples": 32,
     "fit_steps": 4,
     "refit_every": 4,
+    "compact_every_ops": 10,       # arms the background compactor
 }
+
+# the heterogeneous fleet the workload provisions: one bank serves all
+# three families, sub-batched inside each ask_all
+STRATEGY_CYCLE = ["bayesian", "tpe", "clustering"]
 
 
 def kill_specs(seed: int, kills: int) -> List[str]:
@@ -102,7 +108,9 @@ class Workload:
         replies positionally: trial ids are minted sequentially per study,
         so id = round*batch + slot deterministically."""
         for i, name in enumerate(self.names):
-            yield ("create", name, {"sign": -1.0 if i % 2 else 1.0})
+            yield ("create", name,
+                   {"sign": -1.0 if i % 2 else 1.0,
+                    "optimizer": STRATEGY_CYCLE[i % len(STRATEGY_CYCLE)]})
         for r in range(self.rounds):
             for s, name in enumerate(self.names):
                 yield ("ask", name, {"n": self.batch,
@@ -122,7 +130,8 @@ class Workload:
 def exec_step(ex, step: Tuple[str, Optional[str], Dict[str, Any]]):
     kind, name, p = step
     if kind == "create":
-        return ex.create_study(name, sign=p["sign"])
+        return ex.create_study(name, sign=p["sign"],
+                               optimizer=p.get("optimizer"))
     if kind == "ask":
         return ex.ask(name, n=p["n"], req_id=p["req_id"])
     if kind == "tell":

@@ -83,9 +83,12 @@ class ServiceClient:
         return f"/studies/{quote(name, safe='')}/{verb}"
 
     # ------------------------------------------------------------ endpoints
-    def create_study(self, name: str, sign: float = 1.0) -> Dict[str, Any]:
-        return self._request("POST", "/studies",
-                             {"name": name, "sign": sign})
+    def create_study(self, name: str, sign: float = 1.0,
+                     optimizer: Optional[str] = None) -> Dict[str, Any]:
+        body = {"name": name, "sign": sign}
+        if optimizer is not None:
+            body["optimizer"] = optimizer
+        return self._request("POST", "/studies", body)
 
     def ask(self, name: str, n: int = 1,
             req_id: Optional[str] = None) -> Dict[str, Any]:

@@ -173,6 +173,7 @@ class TuningService:
             use_pallas=bool(cfg.get("use_pallas", False)),
             strategy_kwargs=cfg.get("strategy_kwargs"))
         self.compact_every_ops = int(cfg.get("compact_every_ops", 0))
+        self.compact_interval_s = float(cfg.get("compact_interval_s", 0.0))
         self.crash = crash or CrashPoints()
         self._lock = threading.RLock()
         self._names: Dict[str, int] = {}
@@ -187,6 +188,16 @@ class TuningService:
             self.data_dir, self.bank, self._apply_record,
             on_snapshot=lambda: self._restore_extra(self.bank.extra))
         self.wal = WriteAheadLog(os.path.join(self.data_dir, WAL_FILE))
+        # background compaction: the request path only *signals* (an Event
+        # set is nanoseconds); the snapshot+truncate stall moves off the
+        # serving threads onto this timer-driven daemon
+        self._compact_wake = threading.Event()
+        self._stop = threading.Event()
+        self._compact_thread: Optional[threading.Thread] = None
+        if self.compact_every_ops or self.compact_interval_s:
+            self._compact_thread = threading.Thread(
+                target=self._compact_loop, name="wal-compactor", daemon=True)
+            self._compact_thread.start()
 
     # ------------------------------------------------------- side tables
     def _restore_extra(self, extra) -> None:
@@ -260,22 +271,32 @@ class TuningService:
         self._ops_since_snapshot += 1
         if (self.compact_every_ops
                 and self._ops_since_snapshot >= self.compact_every_ops):
-            self._compact_locked()
+            # wake the compactor instead of snapshotting inline: the old
+            # synchronous path stalled whichever unlucky request crossed
+            # the threshold for the whole snapshot+fsync
+            self._compact_wake.set()
         return result
 
     # ------------------------------------------------------------- public
-    def create_study(self, name: str, sign: float = 1.0) -> Dict[str, Any]:
+    def create_study(self, name: str, sign: float = 1.0,
+                     optimizer: Optional[str] = None) -> Dict[str, Any]:
+        """Create (or idempotently re-create) a named study.  ``optimizer``
+        picks the per-study strategy — one bank serves a heterogeneous
+        GP+TPE+clustering fleet, sub-batched per family inside a single
+        ``ask_all`` — and defaults to the bank-wide config strategy."""
         sign = float(sign)
         with self._lock:
             if name in self._names:
                 b = self._names[name]
                 view = self.bank.studies[b]
-                if sign == view.sign:
-                    return {"study": b, "name": name, "created": False}
+                cur = self.bank.strategy_names[b]
+                if sign == view.sign and optimizer in (None, cur):
+                    return {"study": b, "name": name, "optimizer": cur,
+                            "created": False}
                 if view.num_trials > 0:
                     raise ServiceError(
                         409, f"study {name!r} already has trials with "
-                             f"sign {view.sign}")
+                             f"sign {view.sign} / strategy {cur!r}")
             else:
                 b = len(self._names)
                 if b >= self.bank.n_studies:
@@ -283,9 +304,13 @@ class TuningService:
                         507, f"bank capacity {self.bank.n_studies} "
                              "exhausted (raise max_studies)")
             self._check_writable()
-            self._commit({"op": "create", "study": b, "name": name,
-                          "sign": sign})
-            return {"study": b, "name": name, "created": True}
+            op = {"op": "create", "study": b, "name": name, "sign": sign}
+            if optimizer is not None:
+                op["optimizer"] = str(optimizer)
+            self._commit(op)
+            return {"study": b, "name": name,
+                    "optimizer": self.bank.strategy_names[b],
+                    "created": True}
 
     def ask(self, name: str, n: int = 1,
             req_id: Optional[str] = None) -> Dict[str, Any]:
@@ -409,6 +434,28 @@ class TuningService:
             self._check_writable()
             return self._compact_locked()
 
+    def _compact_loop(self) -> None:
+        """Daemon compactor: sleeps until the op-count threshold signal
+        (``_commit``) or the ``compact_interval_s`` timer, then takes the
+        service lock and snapshots.  Compaction never changes bank state
+        (replay skips ``seq <= snapshot op_seq``), so running it off the
+        request path is crash-equivalent to the old inline call — the
+        chaos harness's ``compact.background`` point proves it."""
+        while not self._stop.is_set():
+            self._compact_wake.wait(self.compact_interval_s or None)
+            if self._stop.is_set():
+                return
+            self._compact_wake.clear()
+            with self._lock:
+                if self.wal_error is not None \
+                        or self._ops_since_snapshot == 0:
+                    continue
+                self.crash.check("compact.background")
+                try:
+                    self._compact_locked()
+                except ServiceError:
+                    continue    # degraded -> read-only; nothing to drain
+
     def _compact_locked(self) -> Dict[str, Any]:
         assert_holds(self._lock)  # caller-must-hold: snapshot vs. commits
         self.crash.check("compact.before_snapshot")
@@ -434,8 +481,19 @@ class TuningService:
         return {"id": t.id, "params": _to_jsonable(t.params),
                 "status": t.status, "value": t.value}
 
-    def close(self) -> None:
+    def shutdown(self, timeout: Optional[float] = None) -> None:
+        """Stop the background compactor (joining it for up to
+        ``timeout`` seconds — an in-flight snapshot finishes first) and
+        close the WAL.  Idempotent."""
+        self._stop.set()
+        self._compact_wake.set()
+        if self._compact_thread is not None:
+            self._compact_thread.join(timeout)
+            self._compact_thread = None
         self.wal.close()
+
+    def close(self) -> None:
+        self.shutdown(timeout=10.0)
 
 
 # ---------------------------------------------------------------- HTTP layer
@@ -485,7 +543,8 @@ class _Handler(BaseHTTPRequestHandler):
                 body = self._body()
                 if parts == ["studies"]:
                     return self._reply(200, svc.create_study(
-                        body["name"], body.get("sign", 1.0)))
+                        body["name"], body.get("sign", 1.0),
+                        body.get("optimizer")))
                 if parts == ["admin", "compact"]:
                     return self._reply(200, svc.compact())
                 if len(parts) == 3 and parts[0] == "studies":

@@ -237,14 +237,17 @@ def test_tpe_score_kernel_matches_ref(S, n, d_true):
     wb = np.zeros(n, np.float32)
     wg[: (n - 4) // 4] = 1.0
     wb[(n - 4) // 4: n - 4] = 1.0
-    a_row = np.where(wg > 0, np.float32(3.1), np.float32(5.7))
+    # per-row per-DIM scale: distinct values along dims so a kernel that
+    # flattened the dim axis would fail parity
+    a = np.where(wg[:, None] > 0, np.float32(3.1), np.float32(5.7)) \
+        * np.linspace(0.5, 1.5, dp, dtype=np.float32)[None, :]
     scal = np.array([[1.0 / wg.sum(), 1.0 / wb.sum(), 0.0, 0.0]],
                     np.float32)
     out = tpe_scores_pallas(jnp.asarray(C), jnp.asarray(X),
-                            jnp.asarray(a_row), jnp.asarray(wg),
+                            jnp.asarray(a), jnp.asarray(wg),
                             jnp.asarray(wb), jnp.asarray(scal),
                             d_true=d_true, block_s=256)
     ref = tpe_scores_ref(jnp.asarray(C), jnp.asarray(X),
-                         jnp.asarray(a_row), jnp.asarray(wg),
+                         jnp.asarray(a), jnp.asarray(wg),
                          jnp.asarray(wb), jnp.asarray(scal), d_true=d_true)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

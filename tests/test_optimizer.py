@@ -130,19 +130,16 @@ def test_pending_absorbed_inside_fused_program():
     assert picks == ref.propose(X, y, C, 4, pending=P)
 
 
-@pytest.mark.parametrize("use_pallas", [False, True])
-def test_async_pick_is_single_gp_program(monkeypatch, use_pallas):
-    """A replacement pick with k pending trials must dispatch exactly one
-    fused GP program — not one posterior+append program per pending trial
-    (the seed's host loop).  Holds on the Cholesky path AND the Pallas
-    scorer path (whose K^{-1}-tracking absorb is now fused in-program)."""
-    calls = {"fused_pending": 0, "fused_plain": 0, "host_hallucinate": 0}
-    plain_name = ("fused_propose_pallas" if use_pallas
-                  else "fused_propose")
-    pending_name = ("fused_propose_pallas_pending" if use_pallas
-                    else "fused_propose_pending")
-    orig_pending = getattr(gp_mod, pending_name)
-    orig_plain = getattr(gp_mod, plain_name)
+def test_async_pick_is_single_gp_program(monkeypatch):
+    """A replacement pick with k pending trials must dispatch the staged
+    bank pipeline exactly once — one ``bank_absorb`` + one ``bank_pick``
+    per ask, never one posterior+append program per pending trial (the
+    seed's host loop).  Single-study asks route through the bank-of-one
+    engine, so the retired monolithic ``fused_propose*`` ask-path entry
+    points must never run."""
+    calls = {"bank_pick": 0, "bank_absorb": 0, "host_hallucinate": 0}
+    orig_pick = gp_mod.bank_pick
+    orig_absorb = gp_mod.bank_absorb
     orig_hall = gp_mod.GaussianProcess.hallucinate
 
     def count(key, orig):
@@ -151,20 +148,25 @@ def test_async_pick_is_single_gp_program(monkeypatch, use_pallas):
             return orig(*a, **k)
         return wrapper
 
-    monkeypatch.setattr(gp_mod, pending_name,
-                        count("fused_pending", orig_pending))
-    monkeypatch.setattr(gp_mod, plain_name,
-                        count("fused_plain", orig_plain))
+    def boom(*a, **k):
+        raise AssertionError("retired monolithic ask path was used")
+
+    monkeypatch.setattr(gp_mod, "bank_pick", count("bank_pick", orig_pick))
+    monkeypatch.setattr(gp_mod, "bank_absorb",
+                        count("bank_absorb", orig_absorb))
     monkeypatch.setattr(gp_mod.GaussianProcess, "hallucinate",
                         count("host_hallucinate", orig_hall))
+    for name in ("fused_propose", "fused_propose_pending",
+                 "fused_propose_pallas", "fused_propose_pallas_pending"):
+        monkeypatch.setattr(gp_mod, name, boom)
 
-    opt = AskTellOptimizer(SPACE, seed=0, use_pallas=use_pallas, **FAST)
+    opt = AskTellOptimizer(SPACE, seed=0, **FAST)
     for t in opt.ask(4):               # random phase (no GP yet)
         opt.tell(t.id, quad(t.params))
-    opt.ask(3)                         # no pending -> plain fused program
-    assert calls["fused_plain"] == 1 and calls["fused_pending"] == 0
-    opt.ask(2)                         # 3 pending -> ONE pending program
-    assert calls["fused_pending"] == 1
+    opt.ask(3)                         # no pending -> pick only, no absorb
+    assert calls["bank_pick"] == 1 and calls["bank_absorb"] == 0
+    opt.ask(2)                         # 3 pending -> ONE absorb + ONE pick
+    assert calls["bank_pick"] == 2 and calls["bank_absorb"] == 1
     assert calls["host_hallucinate"] == 0
 
 
@@ -447,14 +449,15 @@ def test_tpe_async_kill_resume_replays_proposals(tmp_path):
     assert resumed.objective_values == full.objective_values
 
 
-@pytest.mark.parametrize("use_pallas", [False, True])
-def test_tpe_ask_is_single_device_program(monkeypatch, use_pallas):
+def test_tpe_ask_is_single_device_program(monkeypatch):
     """Every TPE ask — pending trials included — must dispatch exactly one
-    fused device program and never fall back to the host numpy KDE."""
+    bank-serving fused device program (``fused_tpe_propose_bank``, which
+    vmaps the per-row kernel over the study axis) and never fall back to
+    the host numpy KDE."""
     import repro.core.tpe as tpe_mod
 
     calls = {"fused": 0}
-    orig = tpe_mod.fused_tpe_propose
+    orig = tpe_mod.fused_tpe_propose_bank
 
     def counting(*a, **k):
         calls["fused"] += 1
@@ -463,12 +466,12 @@ def test_tpe_ask_is_single_device_program(monkeypatch, use_pallas):
     def boom(*a, **k):
         raise AssertionError("host numpy KDE path was used")
 
-    monkeypatch.setattr(tpe_mod, "fused_tpe_propose", counting)
+    monkeypatch.setattr(tpe_mod, "fused_tpe_propose_bank", counting)
     monkeypatch.setattr(tpe_mod.TPEStrategy, "_log_kde", boom)
     monkeypatch.setattr(tpe_mod.TPEStrategy, "propose_host", boom)
 
     opt = AskTellOptimizer(
-        SPACE, optimizer="tpe", seed=0, use_pallas=use_pallas,
+        SPACE, optimizer="tpe", seed=0,
         strategy_kwargs={"pending_penalty": True}, **FAST)
     for t in opt.ask(4):               # random phase (no model yet)
         opt.tell(t.id, quad(t.params))

@@ -4,6 +4,7 @@ chaos kill/restart harness."""
 import json
 import os
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -330,6 +331,91 @@ def test_create_study_idempotent_and_capacity(tmp_path):
         svc.create_study("c")
     assert ei.value.status == 507
     svc.close()
+
+
+def test_create_study_optimizer_idempotent_and_conflict(tmp_path):
+    svc = _svc(tmp_path)
+    r = svc.create_study("a", optimizer="tpe")
+    assert r["created"] and r["optimizer"] == "tpe"
+    r = svc.create_study("a", optimizer="tpe")     # exact re-create
+    assert not r["created"] and r["optimizer"] == "tpe"
+    # optimizer omitted matches whatever the study already runs
+    assert not svc.create_study("a")["created"]
+    # trial-free strategy switch re-journals the create
+    r = svc.create_study("a", optimizer="clustering")
+    assert r["created"] and r["optimizer"] == "clustering"
+    assert svc.bank.strategy_names[0] == "clustering"
+    svc.ask("a", 1, req_id="r")
+    with pytest.raises(ServiceError) as ei:
+        svc.create_study("a", optimizer="bayesian")   # flip with trials
+    assert ei.value.status == 409 and "clustering" in str(ei.value)
+    svc.close()
+
+
+@pytest.mark.parametrize("compact_mid", [False, True])
+def test_mixed_strategy_recovery_matches_oracle(tmp_path, compact_mid):
+    """Kill->resume with a heterogeneous fleet: per-study strategies are
+    journaled on the create ops (and carried by the snapshot's strategy
+    column), so recovery rebuilds the family routing and every family's
+    next proposals are bit-equal to an uninterrupted oracle — via pure
+    WAL replay and via snapshot + WAL suffix."""
+    studies = [("g", "bayesian"), ("t", "tpe"), ("c", "clustering")]
+
+    def drive(svc):
+        for name, strat in studies:
+            assert svc.create_study(name, optimizer=strat)["optimizer"] \
+                == strat
+        for rnd in range(3):
+            for name, _ in studies:
+                ids = [t["id"] for t in
+                       svc.ask(name, 2, req_id=f"{name}{rnd}")["trials"]]
+                svc.tell(name, ids[0], float(np.cos(rnd)))
+                svc.tell_failed(name, ids[1])
+            if compact_mid and rnd == 1:
+                svc.compact()
+
+    svc = _svc(tmp_path, name="crashy")
+    drive(svc)
+    svc.close()
+    svc2 = TuningService(tmp_path / "crashy", crash=CrashPoints(""))
+    assert svc2.recovery.snapshot_loaded == compact_mid
+    assert [svc2.bank.strategy_names[svc2._names[n]]
+            for n, _ in studies] == [s for _, s in studies]
+    oracle = _svc(tmp_path, name="oracle")
+    drive(oracle)
+    for name, _ in studies:
+        a = svc2.ask(name, 2, req_id=f"fin{name}")
+        b = oracle.ask(name, 2, req_id=f"fin{name}")
+        assert a["trials"] == b["trials"], name
+    assert svc2.bank.op_seq == oracle.bank.op_seq
+    svc2.close()
+    oracle.close()
+
+
+def test_background_compaction_drains_and_shutdown_joins(tmp_path):
+    """Past the op threshold the request only wakes the compactor; the
+    daemon thread takes the snapshot shortly after, off the request path.
+    ``shutdown(timeout=)`` stops and joins it, and a restart recovers
+    from the background-written snapshot."""
+    # the op threshold wakes the daemon mid-burst; the interval timer
+    # drains whatever tail stays below the threshold afterwards
+    svc = _svc(tmp_path, compact_every_ops=4, compact_interval_s=0.05)
+    assert svc._compact_thread is not None and svc._compact_thread.is_alive()
+    svc.create_study("a")
+    for i in range(8):
+        tid = svc.ask("a", 1, req_id=f"r{i}")["trials"][0]["id"]
+        svc.tell("a", tid, float(i))
+    deadline = time.time() + 10.0
+    while time.time() < deadline and svc._ops_since_snapshot:
+        time.sleep(0.01)
+    assert svc._ops_since_snapshot == 0      # the daemon drained the WAL
+    op_seq = svc.bank.op_seq
+    svc.shutdown(timeout=5.0)
+    assert svc._compact_thread is None
+    svc2 = _svc(tmp_path)
+    assert svc2.recovery.snapshot_loaded
+    assert svc2.bank.op_seq == op_seq
+    svc2.close()
 
 
 # --------------------------------------------------------------------------- #

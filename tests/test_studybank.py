@@ -262,6 +262,42 @@ def test_bucket_boundary_parity_clustering(n_obs):
                                   oracle.astype(np.float32))
 
 
+def test_mixed_bank_parity_with_homogeneous_banks():
+    """One bank holding GP + TPE + clustering studies picks bit-equal to
+    three homogeneous banks: the per-family sub-batching inside a single
+    ``ask_all`` changes the dispatch grouping, never the math — every row
+    of a vmap'd stage is independent of its neighbors, and all four banks
+    draw the identical flat candidate stream from the same bank seed."""
+    B = 9
+    strats = STRATS * 3
+
+    def build(opt):
+        bank = StudyBank(SPACE, B, optimizer=opt, seed=11, mc_samples=48,
+                         fit_steps=8)
+        rng = np.random.default_rng(2)
+        for b in range(B):
+            for _ in range(8):
+                p = {"x": float(rng.uniform(0, 1)),
+                     "y": float(rng.uniform(-1, 1))}
+                bank.study(b).observe_params(p, _objective(p))
+        return bank
+
+    mixed = build(strats)
+    assert mixed.optimizer == "mixed"
+    homos = {s: build(s) for s in STRATS}
+    for rnd in range(3):
+        got = mixed.ask_all(2)
+        want = {s: homos[s].ask_all(2) for s in STRATS}
+        for b in range(B):
+            s = strats[b]
+            assert [t.params for t in got[b]] \
+                == [t.params for t in want[s][b]], (rnd, b, s)
+            for tm, th in zip(got[b], want[s][b]):
+                # identical params -> identical objective fed to both
+                mixed.tell(b, tm.id, _objective(tm.params))
+                homos[s].tell(b, th.id, _objective(th.params))
+
+
 def test_bucket_shapes_shared_across_bank():
     """Studies of different sizes share one bucket: the bank ask pads every
     study to the same power-of-2 capacity, and the ledger factor buffers
